@@ -1,0 +1,52 @@
+"""Fig 11: throughput-prediction model fit quality (NNLS over Eqns 1–6).
+
+Samples (w, p, λ_w, λ_p) setups from a ground-truth job, fits α/β with NNLS,
+and reports RMSLE + R² of predicted vs true throughput on held-out configs,
+plus the fitted coefficients (paper: α_grad=3.48, α_upd=2.36, α_lookup=2.45,
+α_sync=0.68, Σβ=2.45 — ratios are the comparable quantity here).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.perf_model import (
+    JobResources, JobStatics, PerfModel, synthesize_t_iter,
+)
+
+
+def run(seed: int = 0) -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(seed)
+    # larger model (sync matters) and wide (w, p) ranges so every term of
+    # Eqns 2-5 contributes identifiably, as in the paper's sampled setups
+    stat = JobStatics(batch_size=512, model_size=6.4e9, bandwidth=1e9, emb_dim=16)
+    alpha = [3.48e-3, 2.36e-3, 0.68e-3, 2.45e-5]
+    beta = 2.45e-3
+
+    def sample(n):
+        out = []
+        for _ in range(n):
+            r = JobResources(w=int(rng.integers(1, 33)), p=int(rng.integers(1, 5)),
+                             cpu_w=float(rng.integers(1, 33)),
+                             cpu_p=float(rng.integers(1, 9)))
+            t = synthesize_t_iter(r, stat, alpha, beta, noise=0.03, rng=rng)
+            out.append((r, stat, t))
+        return out
+
+    train, test = sample(64), sample(32)
+    model = PerfModel().fit(train)
+    rows.append(("rmsle_train", model.rmsle(train), "paper: good fit"))
+    rows.append(("rmsle_test", model.rmsle(test), ""))
+    pred = np.array([model.throughput(r, s) for r, s, _ in test])
+    true = np.array([s.batch_size * r.w / t for r, s, t in test])
+    ss_res = float(np.sum((pred - true) ** 2))
+    ss_tot = float(np.sum((true - true.mean()) ** 2))
+    rows.append(("r2_throughput_test", 1 - ss_res / ss_tot, "paper Fig11: tight"))
+    for i, name in enumerate(("grad", "upd", "sync", "emb")):
+        ratio = model.alpha[i] / alpha[i] if alpha[i] else float("nan")
+        rows.append((f"alpha_{name}_recovery", ratio, "1.0 = exact"))
+    rows.append(("beta_sum_recovery", model.beta_sum / beta, "1.0 = exact"))
+    return rows

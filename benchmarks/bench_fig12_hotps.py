@@ -1,0 +1,111 @@
+"""Fig 12: hot-PS handling — no-intervention vs stop-and-restart vs seamless.
+
+Deterministic scenario: a PS goes hot (3 % effective speed) 5 minutes into a
+job. Three strategies resolve it; the paper reports DLRover-RM cutting JCT by
+36.4 % (vs no intervention) and 27.6 % (vs traditional migration), saving
+~5 min of provisioning overlap and ~3 min of checkpoint time (flash vs RDS).
+
+Also measures a REAL flash-checkpoint: in-memory save/restore of a ~40 MB
+train state vs synchronous npz persistence.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.migration import MigrationPlan, MigrationTimings
+from repro.sim.cluster import CloudSim, TIMINGS
+from repro.sim.workload import generate_jobs
+
+
+def _jct_with_strategy(strategy: str, seed: int = 9) -> float:
+    """Same allocation for every strategy; only the hot-PS mitigation differs
+    (isolates the mechanism, like the paper's Fig 12). The job runs with a
+    small PS fleet (p=2, the paper's small-cluster regime) so one hot PS
+    actually gates the iteration."""
+    import dataclasses
+    from repro.core.perf_model import JobResources
+    jobs = generate_jobs(1, seed=seed, mean_msamples=40.0)
+    jobs[0] = dataclasses.replace(
+        jobs[0], oracle=JobResources(w=8, p=2, cpu_w=16, cpu_p=8, mem_p=32.0))
+    sim = CloudSim("static_tuned", total_cpu=8192, total_mem_gb=65536, seed=3,
+                   enable_failures=False, hotps_rate_per_pod_per_day=0.0)
+    orig = CloudSim._throughput
+    injected = [False]
+
+    def patched(self, rj, now):
+        if not injected[0] and now >= 300.0:
+            injected[0] = True
+            rj.record.hot_pses += 1
+            if strategy == "dlrover":
+                # seamless: provisioning overlaps training; flash-ckpt sync
+                rj.hotps_until = now + TIMINGS.provision_s
+                sync = TIMINGS.flash_ckpt_save_s + TIMINGS.flash_ckpt_load_s
+                rj.blocked_until = now + TIMINGS.provision_s + sync
+                rj.record.downtime_s += sync
+            elif strategy == "traditional":
+                # stop-and-restart: pause, RDS ckpt, provision, load
+                dt = (TIMINGS.rds_ckpt_save_s + TIMINGS.provision_s
+                      + TIMINGS.rds_ckpt_load_s)
+                rj.hotps_until = now + dt
+                rj.blocked_until = now + dt
+                rj.record.downtime_s += dt
+            else:
+                rj.hotps_until = now + 3600.0          # unhealthy, no action
+        return orig(self, rj, now)
+
+    CloudSim._throughput = patched
+    try:
+        res = sim.run(jobs, horizon_s=10 * 3600)
+    finally:
+        CloudSim._throughput = orig
+    return res.records[0].jct_s or float("nan")
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    jct_none = _jct_with_strategy("none")
+    jct_trad = _jct_with_strategy("traditional")
+    jct_dlr = _jct_with_strategy("dlrover")
+    rows.append(("jct_min.no_intervention", jct_none / 60, "minutes"))
+    rows.append(("jct_min.traditional_migration", jct_trad / 60, "minutes"))
+    rows.append(("jct_min.dlrover_seamless", jct_dlr / 60, "minutes"))
+    rows.append(("reduction_vs_none", 1 - jct_dlr / jct_none, "paper: 0.364"))
+    rows.append(("reduction_vs_traditional", 1 - jct_dlr / jct_trad,
+                 "paper: 0.276"))
+
+    # --- analytic downtime decomposition (MigrationPlan) --------------------
+    seamless = MigrationPlan(seamless=True, use_flash_ckpt=True)
+    trad = MigrationPlan(seamless=False, use_flash_ckpt=False)
+    rows.append(("downtime_s.seamless_flash", seamless.downtime_seconds(),
+                 "paper: seconds"))
+    rows.append(("downtime_s.stop_restart_rds", trad.downtime_seconds(),
+                 "paper: tens of minutes region"))
+
+    # --- REAL flash-checkpoint timing ----------------------------------------
+    from repro.core.flash_checkpoint import FlashCheckpoint
+    state = {"w": [jax.random.normal(jax.random.PRNGKey(i), (512, 512))
+                   for i in range(40)]}          # ~40 MB
+    with tempfile.TemporaryDirectory() as d:
+        ck = FlashCheckpoint(d, async_persist=False)
+        t0 = time.perf_counter()
+        ck.save(state, 1)
+        total_save = time.perf_counter() - t0
+        mem_save = ck.last_save_seconds
+        disk_save = ck.last_persist_seconds
+        like = jax.tree.map(lambda a: np.zeros(a.shape, np.float32), state)
+        t0 = time.perf_counter()
+        ck.restore(like, 1)
+        restore_s = time.perf_counter() - t0
+    rows.append(("flash_mem_save_s", mem_save, "critical path (in-memory)"))
+    rows.append(("flash_disk_persist_s", disk_save, "async, off critical path"))
+    rows.append(("flash_restore_s", restore_s, ""))
+    rows.append(("flash_speedup", disk_save / max(mem_save, 1e-9),
+                 "mem tier vs disk tier"))
+    return rows

@@ -1,0 +1,93 @@
+"""Fig 13: worker-straggler handling via dynamic data sharding.
+
+Deterministic scenario: one worker drops to 3 % speed 5 minutes in. DLRover
+rebalances within ~1 minute by shrinking the straggler's shards; traditional
+handling stop-and-restarts; no-intervention persists unhealthy. Paper: JCT
+cut 48.5 % (vs none) / 37 % (vs traditional). Also demonstrates the REAL
+shard-queue rebalancing (split shards to a straggler + exactly-once coverage).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.sharding_service import ShardingService
+from repro.sim.cluster import CloudSim, TIMINGS
+from repro.sim.workload import generate_jobs
+
+
+def _jct(strategy: str, seed: int = 9) -> float:
+    """Same well-tuned allocation for every strategy; only the straggler
+    mitigation differs (isolates the mechanism, like the paper's Fig 13)."""
+    jobs = generate_jobs(1, seed=seed, mean_msamples=40.0)
+    sim = CloudSim("static_tuned", total_cpu=8192, total_mem_gb=65536, seed=3,
+                   enable_failures=False, straggler_rate_per_pod_per_day=0.0)
+    orig = CloudSim._throughput
+    injected = [False]
+
+    def patched(self, rj, now):
+        if not injected[0] and now >= 300.0:
+            injected[0] = True
+            rj.record.stragglers += 1
+            if strategy == "dlrover":
+                # dynamic data sharding rebalances within ~1 minute
+                rj.straggler_until = now + 60.0
+            elif strategy == "traditional":
+                dt = (TIMINGS.rds_ckpt_save_s + TIMINGS.provision_s
+                      + TIMINGS.rds_ckpt_load_s)
+                rj.straggler_until = now + dt
+                rj.blocked_until = now + dt
+                rj.record.downtime_s += dt
+            else:
+                rj.straggler_until = now + 3600.0
+        return orig(self, rj, now)
+
+    CloudSim._throughput = patched
+    try:
+        res = sim.run(jobs, horizon_s=10 * 3600)
+    finally:
+        CloudSim._throughput = orig
+    return res.records[0].jct_s or float("nan")
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    jn, jt, jd = _jct("none"), _jct("traditional"), _jct("dlrover")
+    rows.append(("jct_min.no_intervention", jn / 60, "minutes"))
+    rows.append(("jct_min.traditional", jt / 60, "minutes"))
+    rows.append(("jct_min.dlrover_sharding", jd / 60, "minutes"))
+    rows.append(("reduction_vs_none", 1 - jd / jn, "paper: 0.485"))
+    rows.append(("reduction_vs_traditional", 1 - jd / jt, "paper: 0.37"))
+
+    # --- real shard-queue rebalancing ----------------------------------------
+    svc = ShardingService(total_samples=4096, shard_size=512, min_shard=64,
+                          heartbeat_timeout=10.0)
+    clock = [0.0]
+
+    def tick(adv=1.0):
+        clock[0] += adv
+        return clock[0]
+
+    # fast worker consumes normally; straggler gets split shards
+    fast_sizes, slow_sizes = [], []
+    svc._view("slow", 0.0).is_straggler = True
+    while True:
+        s_fast = svc.request_shard("fast", tick())
+        if s_fast is not None:
+            svc.heartbeat("fast", s_fast.size, tick())
+            svc.report_done("fast", s_fast.index, tick())
+            fast_sizes.append(s_fast.size)
+        s_slow = svc.request_shard("slow", tick())
+        if s_slow is not None:
+            svc.heartbeat("slow", s_slow.size, tick())
+            svc.report_done("slow", s_slow.index, tick())
+            slow_sizes.append(s_slow.size)
+        if s_fast is None and s_slow is None:
+            break
+    ok, covered, dup = svc.coverage(0)
+    import numpy as np
+    rows.append(("mean_shard.fast", float(np.mean(fast_sizes)), "samples"))
+    rows.append(("mean_shard.straggler", float(np.mean(slow_sizes)),
+                 "smaller workload per paper §5.1"))
+    rows.append(("coverage_exact", float(ok), f"covered={covered} dup={dup}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Fig 14 + Table 4: production-cluster migration — utilization, JCR, failures.
+
+Contended cluster with failures/stragglers/hot-PSes/OOM-growth. "Before" =
+user-configured static jobs on Kubeflow-like infra; "after" = the same trace
+under DLRover-RM. Paper: CPU util 19→40 %, memory util ~15→40 %, JCR 84→95 %
+(small jobs) / 67→87 % (large), OOM failures 4.7 %→0.23 %.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.sim.cluster import CloudSim
+from repro.sim.workload import generate_jobs
+
+
+def run(n_jobs: int = 60, seed: int = 21) -> List[Row]:
+    rows: List[Row] = []
+    jobs = generate_jobs(n_jobs, seed=seed, arrival_rate_per_h=120,
+                         mean_msamples=40.0)
+    results = {}
+    for name, label in [("static_user", "before"), ("dlrover_rm", "after")]:
+        sim = CloudSim(name, total_cpu=3072, total_mem_gb=24576, seed=5,
+                       pod_failure_rate_per_day=0.015,
+                       straggler_rate_per_pod_per_day=0.3,
+                       hotps_rate_per_pod_per_day=0.3)
+        res = sim.run(jobs, horizon_s=24 * 3600)
+        results[label] = res
+        rows.append((f"cpu_util.{label}", res.mean_cpu_util(),
+                     "paper: 0.19 -> 0.40"))
+        rows.append((f"mem_util.{label}", res.mean_mem_util(),
+                     "paper: ~0.15 -> ~0.40"))
+        rows.append((f"jcr.{label}", res.jcr(), "paper: 0.84 -> 0.95"))
+        ev = res.event_rates()
+        rows.append((f"oom_per_job.{label}", ev["oom_failure"],
+                     "paper: 4.7% -> 0.23%"))
+        rows.append((f"restart_failures_per_job.{label}", ev["other_failure"], ""))
+    b, a = results["before"], results["after"]
+    rows.append(("cpu_util_gain", a.mean_cpu_util() - b.mean_cpu_util(),
+                 "paper: +0.21"))
+    rows.append(("mem_util_gain", a.mean_mem_util() - b.mean_mem_util(),
+                 "paper: +0.17-0.31"))
+    rows.append(("jcr_gain", a.jcr() - b.jcr(), "paper: +0.06-0.20"))
+    return rows

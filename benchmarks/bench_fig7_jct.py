@@ -1,0 +1,46 @@
+"""Fig 7: JCT per DLRM model under DLRover-RM vs well-tuned / ES / Optimus.
+
+Small-cluster regime (no failures). DLRover-RM runs with a warmed config DB
+(the production deployment state); paper claims: within ~1.4 % of well-tuned,
+17.7 % better than ES, 28.5 % better than Optimus. Our synthetic workload has
+a wider resource-sensitivity range than the paper's three tuned models, so
+relative gaps are larger; ordering is the reproduced claim.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.sim.cluster import CloudSim
+from repro.sim.workload import generate_jobs
+
+
+def run(n_jobs: int = 24, horizon_h: float = 20.0, seed: int = 11) -> List[Row]:
+    rows: List[Row] = []
+    jobs = generate_jobs(n_jobs, seed=seed, arrival_rate_per_h=40,
+                         mean_msamples=40.0)
+    med: Dict[str, float] = {}
+    per_kind: Dict[str, Dict[str, float]] = {}
+    for name in ["static_tuned", "dlrover_rm", "es", "optimus"]:
+        sim = CloudSim(name, total_cpu=8192, total_mem_gb=65536, seed=7,
+                       enable_failures=False)
+        res = sim.run(jobs, horizon_s=horizon_h * 3600)
+        jcts = [r.jct_s for r in res.records if r.jct_s is not None]
+        med[name] = float(np.median(jcts)) if jcts else float("nan")
+        for kind in ("wide_deep", "xdeepfm", "dcn"):
+            ks = [r.jct_s for r in res.records
+                  if r.jct_s is not None and r.kind == kind]
+            per_kind.setdefault(kind, {})[name] = (
+                float(np.median(ks)) if ks else float("nan"))
+        rows.append((f"median_jct_min.{name}", med[name] / 60.0, "minutes"))
+    for kind, vals in per_kind.items():
+        for name, v in vals.items():
+            rows.append((f"jct_min.{kind}.{name}", v / 60.0, "minutes"))
+    base = med["dlrover_rm"]
+    rows.append(("dlrover_vs_tuned", med["static_tuned"] / base,
+                 "paper: ~0.986 (within 1.4%)"))
+    rows.append(("es_vs_dlrover", med["es"] / base, "paper: ~1.18"))
+    rows.append(("optimus_vs_dlrover", med["optimus"] / base, "paper: ~1.29"))
+    return rows

@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks (CPU host): XLA paths wall-time + Pallas interpret
+correctness spot checks. Real TPU timings are out of scope on this host — the
+structural (roofline) analysis of the kernels lives in benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag
+from repro.models.attention import chunked_attention
+
+
+def _time(fn, *args, iters=5) -> float:
+    jax.block_until_ready(fn(*args))                     # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    # embedding bag: ref (jnp gather+pool) jit'd
+    table = jax.random.normal(key, (100_000, 16))
+    idx = jax.random.randint(key, (512, 8), 0, 100_000)
+    f_ref = jax.jit(lambda t, i: ref.embedding_bag_ref(t, i, combiner="sum"))
+    us = _time(f_ref, table, idx)
+    rows.append(("embedding_bag_ref_us", us, "B=512 hot=8 D=16 R=100k"))
+    out_p = embedding_bag(table, idx, combiner="sum", interpret=True)
+    err = float(jnp.abs(out_p - f_ref(table, idx)).max())
+    rows.append(("embedding_bag_pallas_err", err, "interpret vs ref"))
+
+    # chunked attention (the dry-run lowering path)
+    B, S, H, D = 1, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H // 2, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H // 2, D))
+    f_attn = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                       q_chunk=256, k_chunk=256))
+    us = _time(f_attn, q, k, v, iters=3)
+    rows.append(("chunked_attention_us", us, f"S={S} H={H} D={D} causal"))
+    f_local = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, window=128, q_chunk=128, k_chunk=128))
+    us_local = _time(f_local, q, k, v, iters=3)
+    rows.append(("windowed_attention_us", us_local, "window=128 (sub-quadratic)"))
+    rows.append(("local_vs_global_speedup", us / max(us_local, 1e-9),
+                 "window cuts O(S^2) -> O(S*W)"))
+    return rows

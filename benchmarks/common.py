@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark suite (one module per paper table/figure).
+
+Every bench module exposes ``run() -> List[Tuple[str, float, str]]`` rows of
+(metric_name, value, notes); ``benchmarks.run`` prints them as CSV.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+@contextmanager
+def timed(label: str, rows: List[Row], unit: str = "s"):
+    t0 = time.perf_counter()
+    yield
+    rows.append((label, time.perf_counter() - t0, unit))
+
+
+def fmt_rows(bench: str, rows: List[Row]) -> str:
+    out = []
+    for name, value, notes in rows:
+        out.append(f"{bench},{name},{value:.6g},{notes}")
+    return "\n".join(out)

@@ -1,0 +1,114 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from dry-run JSONs.
+
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective = collective_bytes / (chips × 50 GB/s ICI)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` of the SPMD module.
+XLA:CPU reports the *per-device partitioned program*, so terms are already
+per-chip; collective bytes are parsed from the partitioned HLO text
+(result-shape bytes per collective op ≈ per-device traffic).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per cell plus the dominant-term classification.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if "skipped" in rec or "error" in rec:
+        return None
+    n_dev = rec.get("n_devices", 256)
+    # trip-count-exact FLOPs (jaxpr) preferred; fall back to XLA's count
+    flops = rec.get("jaxpr_flops", 0.0) / n_dev
+    if not flops:
+        flops = rec.get("cost", {}).get("flops", 0.0)
+    hbm_bytes = rec.get("analytic_hbm", {}).get("total") or \
+        rec.get("cost", {}).get("bytes accessed", 0.0)
+    coll = rec.get("analytic_collectives", {}).get("total")
+    if coll is None:
+        coll = rec.get("collectives", {}).get("total", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    model_fl = rec.get("model_flops", 0.0)
+    useful = model_fl / (flops * n_dev) if flops else 0.0
+    bound = max(t_compute, t_memory, t_coll)
+    ideal = (model_fl / n_dev) / PEAK_FLOPS if n_dev else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant,
+        "useful_flop_frac": useful,
+        "roofline_frac": (ideal / bound) if bound else 0.0,
+        "flops": flops, "hbm_bytes": hbm_bytes, "coll_bytes": coll,
+    }
+
+
+BASELINE_DIR = "experiments/dryrun_baseline"
+
+
+def load_all(dirname: str = DRYRUN_DIR) -> List[Dict]:
+    """Load optimized-sweep cells; fall back to baseline artifacts for cells
+    the (long-running) optimized sweep hasn't re-compiled yet."""
+    by_name: Dict[str, str] = {}
+    for src in (BASELINE_DIR, dirname):
+        for path in sorted(glob.glob(os.path.join(src, "*.json"))):
+            by_name[os.path.basename(path)] = path
+    out = []
+    for name in sorted(by_name):
+        path = by_name[name]
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyze_record(rec)
+        if a is not None:
+            a["provenance"] = "optimized" if path.startswith(dirname) else "baseline"
+            out.append(a)
+        else:
+            out.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                        "mesh": rec.get("mesh"),
+                        "skipped": rec.get("skipped") or rec.get("error")})
+    return out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    cells = load_all()
+    if not cells:
+        rows.append(("no_dryrun_artifacts", 0.0,
+                     f"run repro.launch.dryrun --all first (dir={DRYRUN_DIR})"))
+        return rows
+    n_done = 0
+    for c in cells:
+        tag = f"{c['arch']}.{c['shape']}.{c['mesh']}"
+        if "skipped" in c:
+            rows.append((f"{tag}.skipped", 0.0, str(c["skipped"])[:80]))
+            continue
+        n_done += 1
+        rows.append((f"{tag}.t_compute_s", c["t_compute"], ""))
+        rows.append((f"{tag}.t_memory_s", c["t_memory"], ""))
+        rows.append((f"{tag}.t_collective_s", c["t_collective"], ""))
+        rows.append((f"{tag}.dominant", {"compute": 0.0, "memory": 1.0,
+                                         "collective": 2.0}[c["dominant"]],
+                     c["dominant"]))
+        rows.append((f"{tag}.useful_flop_frac", c["useful_flop_frac"],
+                     "MODEL_FLOPS / (HLO_FLOPs x chips)"))
+        rows.append((f"{tag}.roofline_frac", c["roofline_frac"],
+                     "ideal compute time / dominant term"))
+    rows.append(("cells_analyzed", float(n_done), ""))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig7,fig12] [--fast]``
+prints ``bench,metric,value,notes`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("table1", "benchmarks.bench_table1_cost"),
+    ("fig7", "benchmarks.bench_fig7_jct"),
+    ("fig8", "benchmarks.bench_fig8_convergence"),
+    ("fig9", "benchmarks.bench_fig9_warmstart"),
+    ("fig10", "benchmarks.bench_fig10_autoscaling"),
+    ("fig11", "benchmarks.bench_fig11_perfmodel"),
+    ("fig12", "benchmarks.bench_fig12_hotps"),
+    ("fig13", "benchmarks.bench_fig13_straggler"),
+    ("fig14", "benchmarks.bench_fig14_cluster"),
+    ("fig15", "benchmarks.bench_fig15_jct_cdf"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench keys (e.g. fig7,fig12)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("bench,metric,value,notes")
+    failed = []
+    for key, module_name in BENCHES:
+        if only and key not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            import importlib
+            mod = importlib.import_module(module_name)
+            rows = mod.run()
+            for name, value, notes in rows:
+                print(f"{key},{name},{value:.6g},{notes}")
+            print(f"{key},_elapsed_s,{time.perf_counter() - t0:.1f},")
+        except Exception as e:
+            failed.append(key)
+            print(f"{key},_error,nan,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"#FAILED: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

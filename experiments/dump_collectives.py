@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-op collective dump for one dry-run cell (perf-iteration instrument).
+
+    PYTHONPATH=src python experiments/dump_collectives.py --arch X --shape Y
+"""
+import argparse
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import lower_cell, _SHAPE_RE, _DTYPE_BYTES, _COLL_OPS  # noqa
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_arch, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import build_model
+    from repro.sharding.policy import logical_spec, make_policy, use_policy
+    from repro.train import optim as optim_mod
+    from repro.train import trainer as trainer_mod
+
+    cfg = get_arch(args.arch)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh()
+    policy = make_policy(mesh, cfg, shape)
+    api = build_model(cfg)
+    optimizer = optim_mod.make("adam", 1e-3)
+
+    with mesh, use_policy(policy):
+        from repro.launch.dryrun import batch_shardings
+        b_sh = batch_shardings(api, shape, policy)
+        in_specs = api.input_specs(shape)
+        if shape.kind == "train":
+            state = jax.eval_shape(
+                lambda k: trainer_mod.make_train_state(api, optimizer, k),
+                jax.random.PRNGKey(0))
+            st_sh = logical_spec(None, trainer_mod.train_state_specs(api, "adam"),
+                                 policy)
+            step = trainer_mod.make_train_step(api, optimizer, remat=True)
+            lowered = jax.jit(step, in_shardings=(st_sh, b_sh),
+                              donate_argnums=(0,)).lower(state, in_specs)
+        elif shape.kind == "prefill":
+            params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            p_sh = logical_spec(None, api.param_specs(), policy)
+            lowered = jax.jit(api.prefill, in_shardings=(p_sh, b_sh)).lower(
+                params, in_specs)
+        else:
+            params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            p_sh = logical_spec(None, api.param_specs(), policy)
+            cache = jax.eval_shape(lambda: api.init_cache(
+                shape.global_batch, shape.seq_len, jnp.bfloat16))
+            c_sh = logical_spec(None, api.cache_specs(), policy)
+            t_sh = {"tokens": policy.sharding(("batch", None))}
+            fn = lambda p, c, b: api.decode_step(p, c, b["tokens"])
+            lowered = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                              donate_argnums=(1,)).lower(params, cache, in_specs)
+        hlo = lowered.compile().as_text()
+
+    # group lines by computation (track while-body membership)
+    ops = []
+    comp = "main"
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{$", s)
+        if s.endswith("{") and ("(" in s) and "->" in s:
+            comp = s.split()[0].lstrip("%")
+        for op in _COLL_OPS:
+            if f" {op}(" in s or f" {op}-start(" in s:
+                lhs = s.split("=", 1)[1] if "=" in s else s
+                idx = lhs.find(f" {op}")
+                rtype = lhs[:idx]
+                total = sum(
+                    int.__mul__(
+                        _DTYPE_BYTES.get(d, 4),
+                        eval("*".join(dims.split(",")) or "1"))
+                    for d, dims in _SHAPE_RE.findall(rtype))
+                ops.append((total, op, comp, rtype.strip()[:90]))
+    ops.sort(reverse=True)
+    print(f"{len(ops)} collective ops; top {args.top}:")
+    for total, op, comp, rtype in ops[: args.top]:
+        print(f"{total/1e6:10.1f} MB  {op:20s} in {comp[:40]:40s} {rtype}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Render §Dry-run and §Roofline markdown tables from experiments/dryrun JSONs.
+
+    PYTHONPATH=src python experiments/render_tables.py [--dir experiments/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def fmt_bytes(x):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def fmt_t(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def load(dirname):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None, help="filter mesh (16x16/2x16x16)")
+    args = ap.parse_args()
+    recs = load(args.dir)
+
+    print("| arch | shape | mesh | status | compile | HLO flops/dev | jaxpr flops (global) | "
+          "coll bytes/dev | temp mem/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if args.mesh and r.get("mesh") != args.mesh:
+            continue
+        tag = f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        if "skipped" in r:
+            print(tag + f"| SKIP ({r['skipped'][:40]}...) | | | | | |")
+            continue
+        if "error" in r:
+            print(tag + f"| **ERROR** {r['error'][:60]} | | | | | |")
+            continue
+        cost = r.get("cost", {})
+        mem = r.get("memory", {})
+        print(tag + f"| ok | {r.get('compile_s', 0):.0f}s "
+              f"| {cost.get('flops', 0):.3g} "
+              f"| {r.get('jaxpr_flops', 0):.3g} "
+              f"| {fmt_bytes(r.get('collectives', {}).get('total', 0))} "
+              f"| {fmt_bytes(mem.get('temp_size_in_bytes', 0))} |")
+
+    print("\n\n## Roofline (per device, jaxpr-exact FLOPs; 16x16 mesh)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") != (args.mesh or "16x16"):
+            continue
+        if "skipped" in r or "error" in r:
+            continue
+        n_dev = r.get("n_devices", 256)
+        fl_dev = r.get("jaxpr_flops", 0) / n_dev
+        t_c = fl_dev / PEAK_FLOPS
+        hbm = r.get("analytic_hbm", {}).get("total", 0)
+        t_m = hbm / HBM_BW
+        coll = r.get("analytic_collectives", {}).get("total", 0)
+        t_n = coll / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                  key=lambda kv: kv[1])[0]
+        model_fl = r.get("model_flops", 0)
+        useful = model_fl / max(r.get("jaxpr_flops", 1), 1)
+        ideal = model_fl / n_dev / PEAK_FLOPS
+        bound = max(t_c, t_m, t_n)
+        frac = ideal / bound if bound else 0
+        print(f"| {r['arch']} | {r['shape']} | {fmt_t(t_c)} | {fmt_t(t_m)} "
+              f"| {fmt_t(t_n)} | **{dom}** | {useful:.2f} | {frac:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

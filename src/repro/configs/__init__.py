@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, SMOKE_SHAPE, reduce_config, shape_applicable,
+)

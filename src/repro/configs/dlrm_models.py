@@ -1,0 +1,82 @@
+"""The paper's own DLRM workloads: Wide&Deep (Model-X), xDeepFM (Model-Y), DCN (Model-Z).
+
+Criteo-like feature layout: 13 dense (continuous) features + 26 categorical
+sparse features, each with its own embedding table (§2.1 of the paper).
+Batch size 512 matches the paper's evaluation setup (§6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    kind: str                           # wide_deep | xdeepfm | dcn
+    n_dense: int = 13
+    n_tables: int = 26
+    # rows per embedding table (hash-bucket sizes; heavy-tailed like Criteo)
+    table_rows: Tuple[int, ...] = ()
+    embed_dim: int = 16                 # D in the paper's Eqn 5 / §5.3
+    mlp_dims: Tuple[int, ...] = (512, 256, 128)
+    cross_layers: int = 3               # DCN
+    cin_layers: Tuple[int, ...] = (128, 128)  # xDeepFM CIN feature maps
+    batch_size: int = 512
+    pooling: str = "sum"                # sum | mean | max (paper §2.1)
+    multi_hot: int = 4                  # lookups per table per sample
+
+    def __post_init__(self):
+        if not self.table_rows:
+            # heavy-tailed bucket sizes, deterministic
+            rows = tuple(
+                int(10 ** (3 + 3 * ((i * 2654435761) % 100) / 100.0))
+                for i in range(self.n_tables)
+            )
+            object.__setattr__(self, "table_rows", rows)
+
+    @property
+    def total_embedding_rows(self) -> int:
+        return sum(self.table_rows)
+
+    def param_count(self) -> int:
+        emb = self.total_embedding_rows * self.embed_dim
+        d_in = self.n_dense + self.n_tables * self.embed_dim
+        dense = 0
+        prev = d_in
+        for h in self.mlp_dims:
+            dense += prev * h + h
+            prev = h
+        dense += prev * 1 + 1
+        if self.kind == "dcn":
+            dense += self.cross_layers * (2 * d_in + 1)
+        if self.kind == "xdeepfm":
+            prev_maps = self.n_tables
+            for maps in self.cin_layers:
+                dense += prev_maps * self.n_tables * maps
+                prev_maps = maps
+            dense += sum(self.cin_layers)
+        if self.kind == "wide_deep":
+            dense += self.total_embedding_rows  # wide (linear) part, 1-dim
+        return emb + dense
+
+
+WIDE_DEEP = DLRMConfig(name="wide_deep", kind="wide_deep")
+XDEEPFM = DLRMConfig(name="xdeepfm", kind="xdeepfm")
+DCN = DLRMConfig(name="dcn", kind="dcn")
+
+
+def reduced_dlrm(cfg: DLRMConfig) -> DLRMConfig:
+    import dataclasses
+    return dataclasses.replace(
+        cfg,
+        n_dense=4,
+        n_tables=6,
+        table_rows=tuple([64] * 6),
+        embed_dim=8,
+        mlp_dims=(32, 16),
+        cross_layers=2,
+        cin_layers=(8, 8),
+        batch_size=32,
+        multi_hot=2,
+    )

@@ -1,0 +1,59 @@
+"""Arch-id → config resolution for ``--arch <id>`` everywhere."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduce_config, shape_applicable
+from repro.configs import (
+    llama3_2_3b, minitron_8b, gemma3_27b, command_r_35b, chameleon_34b,
+    mamba2_2_7b, recurrentgemma_2b, whisper_medium, granite_moe_1b,
+    mixtral_8x22b,
+)
+from repro.configs.dlrm_models import WIDE_DEEP, XDEEPFM, DCN, DLRMConfig
+
+ARCHS: Dict[str, ModelConfig] = {
+    "llama3.2-3b": llama3_2_3b.CONFIG,
+    "minitron-8b": minitron_8b.CONFIG,
+    "gemma3-27b": gemma3_27b.CONFIG,
+    "command-r-35b": command_r_35b.CONFIG,
+    "chameleon-34b": chameleon_34b.CONFIG,
+    "mamba2-2.7b": mamba2_2_7b.CONFIG,
+    "recurrentgemma-2b": recurrentgemma_2b.CONFIG,
+    "whisper-medium": whisper_medium.CONFIG,
+    "granite-moe-1b-a400m": granite_moe_1b.CONFIG,
+    "mixtral-8x22b": mixtral_8x22b.CONFIG,
+}
+
+DLRMS: Dict[str, DLRMConfig] = {
+    "wide_deep": WIDE_DEEP,
+    "xdeepfm": XDEEPFM,
+    "dcn": DCN,
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; choose from {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def get_dlrm(name: str) -> DLRMConfig:
+    if name not in DLRMS:
+        raise KeyError(f"unknown DLRM {name!r}; choose from {sorted(DLRMS)}")
+    return DLRMS[name]
+
+
+def all_cells():
+    """All 40 (arch × shape) dry-run cells with applicability flags."""
+    cells = []
+    for arch_name, cfg in ARCHS.items():
+        for shape_name, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            cells.append((arch_name, shape_name, ok, why))
+    return cells

@@ -1,0 +1,194 @@
+"""Scaling stage (paper §4.2–4.3): RC/TG objectives, NSGA-II candidate
+generation, and cluster-level weighted greedy selection.
+
+    RC(A)  = Σ_r a_r · Money(a_r)                            (Eqn 7)
+    TG(A)  = ΔΨ_thp − Overhead(A)                            (Eqn 8)
+    argmin_A (RC(A), 1/TG(A))                                (Eqn 9)
+    RE(Aʲ) = TG(Aʲ)/RC(Aʲ)                                   (Eqn 11)
+    argmax Σ_j RE(Aʲ)·WG(Aʲ)  s.t. Σ_j Aʲ ≤ S                (Eqn 12–13)
+    WG(Aʲ) = 1 / (Φ_sp/Ψ_thp + ε)^ρ                          (Eqn 14)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.nsga2 import nsga2
+from repro.core.perf_model import JobResources, JobStatics, PerfModel
+
+
+@dataclass(frozen=True)
+class Prices:
+    """Money(a_r): unit prices (AWS-style $/h per unit, Table 1 spirit)."""
+    cpu: float = 0.02
+    mem_gb: float = 0.005
+
+
+@dataclass(frozen=True)
+class ScalingOverheads:
+    """Historical scaling-cost statistics (the Overhead(A) estimator, Eqn 8)."""
+    worker_start_s: float = 30.0
+    ps_start_s: float = 90.0
+    per_cpu_s: float = 0.2
+
+    def overhead_seconds(self, old: JobResources, new: JobResources) -> float:
+        dw = max(0, new.w - old.w)
+        dp = max(0, new.p - old.p)
+        dcpu = max(0.0, new.total_cpu() - old.total_cpu())
+        return dw * self.worker_start_s + dp * self.ps_start_s + dcpu * self.per_cpu_s
+
+
+def resource_cost(r: JobResources, prices: Prices) -> float:
+    return r.total_cpu() * prices.cpu + r.total_mem() * prices.mem_gb   # Eqn 7
+
+
+@dataclass
+class PlanCandidate:
+    job_id: str
+    resources: JobResources
+    rc: float                 # resource cost of the new allocation
+    tg: float                 # throughput gain net of scaling overhead
+    thp: float                # predicted absolute throughput
+
+    @property
+    def re(self) -> float:                                            # Eqn 11
+        return self.tg / max(self.rc, 1e-9)
+
+
+@dataclass
+class JobState:
+    """What the cluster brain knows about one running job."""
+    job_id: str
+    statics: JobStatics
+    current: JobResources
+    model: PerfModel
+    remaining_samples: float
+    priority_rho: float = 2.5
+
+
+BOUNDS = dict(w=(1, 32), p=(1, 16), cpu_w=(1, 32), cpu_p=(1, 32))
+MAX_JOB_CPU = 256.0        # per-job quota (matches cluster policy)
+
+
+def _vec_to_resources(x: np.ndarray, like: JobResources) -> JobResources:
+    return dataclasses.replace(
+        like, w=int(x[0]), p=int(x[1]), cpu_w=float(x[2]), cpu_p=float(x[3]))
+
+
+def generate_candidates(job: JobState, *, prices: Prices = Prices(),
+                        overheads: ScalingOverheads = ScalingOverheads(),
+                        horizon_s: float = 600.0,
+                        pop_size: int = 40, generations: int = 25,
+                        seed: int = 0) -> List[PlanCandidate]:
+    """Job-level NSGA-II over (RC, 1/TG) — the Pareto frontier of Eqn 9."""
+    base_thp = job.model.throughput(job.current, job.statics)
+
+    def objectives(x: np.ndarray) -> Tuple[float, float]:
+        r = _vec_to_resources(x, job.current)
+        rc = resource_cost(r, prices)
+        if r.total_cpu() > MAX_JOB_CPU:                   # per-job quota
+            return rc * 100.0, 1e9
+        thp = job.model.throughput(r, job.statics)
+        # Overhead converted to samples over the decision horizon (Eqn 8)
+        ovh = overheads.overhead_seconds(job.current, r) * base_thp / horizon_s
+        tg = (thp - base_thp) - ovh
+        return rc, 1.0 / max(tg, 1e-6)
+
+    bounds = [BOUNDS["w"], BOUNDS["p"], BOUNDS["cpu_w"], BOUNDS["cpu_p"]]
+    x0 = np.array([job.current.w, job.current.p, job.current.cpu_w,
+                   job.current.cpu_p], float)
+    seeds = [x0, x0 * 2, x0 * 0.5,
+             x0 * np.array([2, 1, 1, 1]), x0 * np.array([1, 2, 1, 1]),
+             x0 * np.array([1, 1, 2, 1]), x0 * np.array([1, 1, 1, 2]),
+             x0 * np.array([2, 2, 1, 1]), x0 * np.array([4, 4, 1, 1])]
+    front = nsga2(objectives, bounds, pop_size=pop_size,
+                  generations=generations, seed=seed, init=seeds)
+    out = []
+    for x, f in front:
+        r = _vec_to_resources(x, job.current)
+        thp = job.model.throughput(r, job.statics)
+        ovh = overheads.overhead_seconds(job.current, r) * base_thp / horizon_s
+        out.append(PlanCandidate(job.job_id, r, rc=f[0],
+                                 tg=(thp - base_thp) - ovh, thp=thp))
+    return out
+
+
+def weight_wg(job: JobState, thp: float, *, eps: float = 1e-6) -> float:
+    """Eqn 14: prioritize shorter-remaining jobs (ρ=2.5 at AntGroup)."""
+    remaining_time = job.remaining_samples / max(thp, 1e-9)
+    return 1.0 / ((remaining_time + eps) ** job.priority_rho)
+
+
+@dataclass
+class ClusterCapacity:
+    total_cpu: float
+    total_mem_gb: float
+
+
+def weighted_greedy_select(jobs: Sequence[JobState],
+                           candidates: Dict[str, List[PlanCandidate]],
+                           capacity: ClusterCapacity
+                           ) -> Dict[str, JobResources]:
+    """Eqns 12–13: pick ≤1 plan per job maximizing Σ RE·WG within capacity.
+
+    Greedy by score density; jobs keep their current allocation when no
+    candidate fits (current allocations are charged against capacity first).
+    """
+    jmap = {j.job_id: j for j in jobs}
+    used_cpu = sum(j.current.total_cpu() for j in jobs)
+    used_mem = sum(j.current.total_mem() for j in jobs)
+
+    scored: List[Tuple[float, PlanCandidate]] = []
+    for jid, cands in candidates.items():
+        job = jmap[jid]
+        for c in cands:
+            if c.tg <= 0:
+                continue
+            scored.append((c.re * weight_wg(job, c.thp), c))
+    scored.sort(key=lambda t: -t[0])
+
+    plans: Dict[str, JobResources] = {}
+    for score, cand in scored:
+        if cand.job_id in plans:
+            continue
+        job = jmap[cand.job_id]
+        dcpu = cand.resources.total_cpu() - job.current.total_cpu()
+        dmem = cand.resources.total_mem() - job.current.total_mem()
+        if used_cpu + dcpu <= capacity.total_cpu and \
+           used_mem + dmem <= capacity.total_mem_gb:
+            plans[cand.job_id] = cand.resources
+            used_cpu += dcpu
+            used_mem += dmem
+    return plans
+
+
+# --- plug-in algorithm API (paper §4.3 "Plug-in Algorithm API") -----------------
+ScalerFn = Callable[[Sequence[JobState], ClusterCapacity], Dict[str, JobResources]]
+_REGISTRY: Dict[str, ScalerFn] = {}
+
+
+def register_scaler(name: str):
+    def deco(fn: ScalerFn) -> ScalerFn:
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_scaler(name: str) -> ScalerFn:
+    return _REGISTRY[name]
+
+
+def list_scalers() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+@register_scaler("dlrover_rm")
+def dlrover_rm_scaler(jobs: Sequence[JobState],
+                      capacity: ClusterCapacity) -> Dict[str, JobResources]:
+    """Stage-2 auto-scaling: per-job NSGA-II + cluster weighted greedy."""
+    candidates = {j.job_id: generate_candidates(j, seed=hash(j.job_id) % 2**31)
+                  for j in jobs if j.model.fitted}
+    return weighted_greedy_select(jobs, candidates, capacity)

@@ -1,0 +1,128 @@
+"""Cluster brain + job master (paper §3, Fig 4).
+
+ClusterBrain = optimizer + config DB (cluster level). JobMaster = profiler +
+executor (job level). The life cycle:
+
+  ① submission → warm-start plan from config-DB similarity (stage 1)
+  ② periodic profiles → online NNLS fit → NSGA-II candidates → cluster-level
+     weighted greedy → execution plans (stage 2)
+  ③ instability handling: dynamic data sharding, seamless migration +
+     flash-checkpoint, OOM prediction (stage 3; §5)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.autoscaler import (
+    ClusterCapacity, JobState, Prices, ScalingOverheads, get_scaler,
+)
+from repro.core.oom import OOMPredictor
+from repro.core.perf_model import JobResources, JobStatics, PerfModel
+from repro.core.sharding_service import ShardingService
+from repro.core.warm_start import ConfigDB, ConfigRecord, JobMeta, warm_start
+
+
+@dataclass
+class Profiler:
+    """Job-level runtime collection (reported to the brain periodically)."""
+    statics: JobStatics
+    observations: List[Tuple[JobResources, JobStatics, float]] = field(
+        default_factory=list)
+    oom: OOMPredictor = field(default_factory=OOMPredictor)
+    max_obs: int = 256
+
+    def record_iteration(self, resources: JobResources, t_iter: float) -> None:
+        self.observations.append((resources, self.statics, t_iter))
+        if len(self.observations) > self.max_obs:
+            self.observations.pop(0)
+
+    def record_memory(self, samples_consumed: float, mem_bytes: float) -> None:
+        self.oom.observe(samples_consumed, mem_bytes)
+
+
+@dataclass
+class JobMaster:
+    """One per job: owns the shard queue, profiler and executor hook."""
+    job_id: str
+    meta: JobMeta
+    statics: JobStatics
+    resources: JobResources
+    total_samples: float
+    sharding: ShardingService
+    profiler: Profiler
+    apply_plan: Optional[Callable[[JobResources], None]] = None
+    samples_done: float = 0.0
+    model: PerfModel = field(default_factory=PerfModel)
+
+    def refit(self) -> None:
+        if len(self.profiler.observations) >= 4:
+            self.model.fit(self.profiler.observations)
+
+    def job_state(self, rho: float = 2.5) -> JobState:
+        return JobState(
+            job_id=self.job_id, statics=self.statics, current=self.resources,
+            model=self.model,
+            remaining_samples=max(self.total_samples - self.samples_done, 0.0),
+            priority_rho=rho)
+
+    def execute(self, plan: JobResources) -> None:
+        self.resources = plan
+        if self.apply_plan:
+            self.apply_plan(plan)
+
+
+class ClusterBrain:
+    def __init__(self, capacity: ClusterCapacity, *,
+                 scaler: str = "dlrover_rm",
+                 prices: Prices = Prices(),
+                 overheads: ScalingOverheads = ScalingOverheads()):
+        self.capacity = capacity
+        self.config_db = ConfigDB()
+        self.scaler_name = scaler
+        self.prices = prices
+        self.overheads = overheads
+        self.masters: Dict[str, JobMaster] = {}
+
+    # ---------------------------------------------------------- stage 1
+    def admit(self, master: JobMaster, *, k: int = 5, mu: float = 0.5
+              ) -> JobResources:
+        plan = warm_start(master.meta, self.config_db, k=k, mu=mu,
+                          default=master.resources)
+        master.execute(plan)
+        self.masters[master.job_id] = master
+        return plan
+
+    # ---------------------------------------------------------- stage 2
+    def optimize(self) -> Dict[str, JobResources]:
+        for m in self.masters.values():
+            m.refit()
+        jobs = [m.job_state() for m in self.masters.values()]
+        scaler = get_scaler(self.scaler_name)
+        plans = scaler(jobs, self.capacity)
+        for jid, plan in plans.items():
+            self.masters[jid].execute(plan)
+        return plans
+
+    # ---------------------------------------------------------- stage 3
+    def check_oom(self) -> Dict[str, float]:
+        """Predictive PS memory scale-ups (GB) per job."""
+        out: Dict[str, float] = {}
+        for jid, m in self.masters.items():
+            remaining = max(m.total_samples - m.samples_done, 0.0)
+            capacity_bytes = m.resources.p * m.resources.mem_p * 1e9
+            hit, peak = m.profiler.oom.will_oom(capacity_bytes, remaining)
+            if hit and peak is not None:
+                rec = m.profiler.oom.recommended_capacity(remaining)
+                new_mem_p = max(rec / m.resources.p / 1e9, m.resources.mem_p)
+                import dataclasses as _dc
+                m.execute(_dc.replace(m.resources, mem_p=new_mem_p))
+                out[jid] = new_mem_p
+        return out
+
+    # ---------------------------------------------------------- completion
+    def complete(self, job_id: str, throughput: float) -> None:
+        m = self.masters.pop(job_id, None)
+        if m is not None:
+            self.config_db.add(ConfigRecord(
+                meta=m.meta, final_config=m.resources, throughput=throughput))

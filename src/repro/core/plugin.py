@@ -1,0 +1,14 @@
+"""Plug-in scheduling-algorithm API (paper §4.3 "Plug-in Algorithm API").
+
+Re-exported from the autoscaler: register a custom cluster-level scaler by
+name and select it via ``ClusterBrain(scaler=<name>)``.
+
+    from repro.core.plugin import register_scaler
+
+    @register_scaler("my_scaler")
+    def my_scaler(jobs, capacity):
+        return {job.job_id: job.current for job in jobs}
+"""
+from repro.core.autoscaler import (  # noqa: F401
+    ScalerFn, get_scaler, list_scalers, register_scaler,
+)

@@ -1,0 +1,204 @@
+"""Dynamic data sharding (paper §5.1).
+
+The job master splits the dataset into numerous small, variably-sized shards
+kept in a *shards queue*. Workers fetch shards on demand, send periodic
+heartbeats carrying *progress offsets*, and report completion. The service:
+
+* requeues the unfinished shard(s) of failed workers (no omission),
+* hands stragglers smaller shards (workload rebalancing, consistent quality),
+* lets new/restarted workers pull work immediately (fast elasticity),
+* guarantees exactly-once *completion* coverage of the sample range.
+
+All methods take an explicit ``now`` timestamp so the service runs identically
+under the simulator's virtual clock and a wall clock.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Shard:
+    """Half-open sample range [start, end) with a unique index."""
+    index: int
+    start: int
+    end: int
+    epoch: int = 0
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+
+@dataclass
+class WorkerView:
+    shard: Optional[Shard] = None
+    progress: int = 0                  # samples processed within current shard
+    last_heartbeat: float = 0.0
+    samples_done: int = 0              # lifetime samples (for straggler detection)
+    first_seen: float = 0.0
+    is_straggler: bool = False
+
+
+class ShardingService:
+    def __init__(self, total_samples: int, shard_size: int = 256 * 64, *,
+                 num_epochs: int = 1, min_shard: int = 64,
+                 heartbeat_timeout: float = 30.0,
+                 straggler_ratio: float = 0.5):
+        assert total_samples > 0 and shard_size > 0
+        self.total = total_samples
+        self.shard_size = shard_size
+        self.min_shard = min_shard
+        self.heartbeat_timeout = heartbeat_timeout
+        self.straggler_ratio = straggler_ratio
+        self.num_epochs = num_epochs
+        self._lock = threading.Lock()
+        self._queue: Deque[Shard] = collections.deque()
+        self._next_index = 0
+        self._epoch = 0
+        self._workers: Dict[str, WorkerView] = {}
+        self._completed: List[Shard] = []
+        self._fill_epoch(0)
+
+    # ------------------------------------------------------------------ fill
+    def _fill_epoch(self, epoch: int) -> None:
+        start = 0
+        while start < self.total:
+            end = min(start + self.shard_size, self.total)
+            self._queue.append(Shard(self._next_index, start, end, epoch))
+            self._next_index += 1
+            start = end
+
+    # --------------------------------------------------------------- workers
+    def _view(self, worker: str, now: float) -> WorkerView:
+        if worker not in self._workers:
+            self._workers[worker] = WorkerView(first_seen=now, last_heartbeat=now)
+        return self._workers[worker]
+
+    def request_shard(self, worker: str, now: float) -> Optional[Shard]:
+        """Hand the next shard; stragglers receive a split (smaller) shard."""
+        with self._lock:
+            self._reap_failures(now)
+            w = self._view(worker, now)
+            w.last_heartbeat = now
+            if w.shard is not None:
+                return w.shard                      # already holding one
+            if not self._queue:
+                if self._epoch + 1 < self.num_epochs:
+                    self._epoch += 1
+                    self._fill_epoch(self._epoch)
+                else:
+                    return None
+            shard = self._queue.popleft()
+            if w.is_straggler and shard.size > self.min_shard:
+                half = shard.size // 2
+                first = replace(shard, end=shard.start + half)
+                second = Shard(self._next_index, shard.start + half, shard.end,
+                               shard.epoch)
+                self._next_index += 1
+                self._queue.appendleft(second)
+                shard = first
+            w.shard = shard
+            w.progress = 0
+            return shard
+
+    def heartbeat(self, worker: str, progress: int, now: float) -> None:
+        with self._lock:
+            w = self._view(worker, now)
+            delta = max(0, progress - w.progress)
+            w.progress = progress
+            w.samples_done += delta
+            w.last_heartbeat = now
+
+    def report_done(self, worker: str, shard_index: int, now: float) -> None:
+        with self._lock:
+            w = self._view(worker, now)
+            if w.shard is not None and w.shard.index == shard_index:
+                w.samples_done += max(0, w.shard.size - w.progress)
+                self._completed.append(w.shard)
+                w.shard = None
+                w.progress = 0
+            w.last_heartbeat = now
+
+    def report_failure(self, worker: str, now: float) -> None:
+        """Explicit failure notification (e.g. pod eviction callback)."""
+        with self._lock:
+            self._fail_worker(worker)
+
+    # ------------------------------------------------------------- liveness
+    def _fail_worker(self, worker: str) -> None:
+        w = self._workers.get(worker)
+        if w is None:
+            return
+        if w.shard is not None:
+            self._queue.appendleft(w.shard)        # requeue unfinished shard
+        del self._workers[worker]
+
+    def _reap_failures(self, now: float) -> List[str]:
+        dead = [name for name, w in self._workers.items()
+                if now - w.last_heartbeat > self.heartbeat_timeout]
+        for name in dead:
+            self._fail_worker(name)
+        return dead
+
+    def check_failures(self, now: float) -> List[str]:
+        with self._lock:
+            return self._reap_failures(now)
+
+    # ------------------------------------------------------------ stragglers
+    def detect_stragglers(self, now: float) -> List[str]:
+        """Progress-offset comparison: rate < ratio × median peer rate."""
+        with self._lock:
+            rates = {}
+            for name, w in self._workers.items():
+                dt = max(now - w.first_seen, 1e-9)
+                rates[name] = (w.samples_done + w.progress) / dt
+            if len(rates) < 2:
+                return []
+            vals = sorted(rates.values())
+            median = vals[len(vals) // 2]
+            out = []
+            for name, rate in rates.items():
+                w = self._workers[name]
+                was = w.is_straggler
+                w.is_straggler = median > 0 and rate < self.straggler_ratio * median
+                if w.is_straggler and not was:
+                    out.append(name)
+            return out
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def epochs_completed(self) -> int:
+        return self._epoch
+
+    def pending_count(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def completed_samples(self, epoch: Optional[int] = None) -> int:
+        with self._lock:
+            return sum(s.size for s in self._completed
+                       if epoch is None or s.epoch == epoch)
+
+    def coverage(self, epoch: int = 0) -> Tuple[bool, int, int]:
+        """Exactly-once check: (is_exact, covered, duplicated) for an epoch."""
+        with self._lock:
+            seen = {}
+            dup = 0
+            for s in self._completed:
+                if s.epoch != epoch:
+                    continue
+                for key in range(s.start, s.end):
+                    if key in seen:
+                        dup += 1
+                    seen[key] = True
+            covered = len(seen)
+            in_flight = any(w.shard is not None and w.shard.epoch == epoch
+                            for w in self._workers.values())
+            pending = any(s.epoch == epoch for s in self._queue)
+            complete = (covered == self.total and dup == 0
+                        and not in_flight and not pending)
+            return complete, covered, dup

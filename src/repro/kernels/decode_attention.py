@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: single-token (decode) attention over long KV caches.
+
+Flash-decode adaptation for TPU: the cache's sequence dim is tiled into
+VMEM-sized blocks; the grid walks (batch, kv-head, k-block) with running
+(m, l, acc) scratch. For GQA, all G query heads of one kv-head are processed
+together as a (G, D) × (D, block_k) matmul — MXU-friendly even at batch 1.
+Masking is position-driven (absolute positions stored alongside the ring/
+linear cache), so the same kernel serves full caches and SWA ring buffers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, cpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, n_k: int,
+                   window: Optional[int], softcap: float):
+    b = pl.program_id(0)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G, bk)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    pos = pos_ref[b]                                        # scalar current position
+    cpos = cpos_ref[0]                                      # (bk,) absolute positions
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window is not None:
+        valid &= cpos > pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_pos: jnp.ndarray, pos: jnp.ndarray, *,
+                     window: Optional[int] = None, softcap: float = 0.0,
+                     block_k: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q (B,1,Hq,D); caches (B,L,Hkv,D); cache_pos (B,L); pos (B,) -> (B,1,Hq,D)."""
+    B, L, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    block_k = min(block_k, L)
+    k_pad = (-L) % block_k
+    kt = jnp.moveaxis(k_cache, 2, 1)                        # (B, Hkv, L, D)
+    vt = jnp.moveaxis(v_cache, 2, 1)
+    cp = cache_pos.astype(jnp.int32)
+    if k_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        cp = jnp.pad(cp, ((0, 0), (0, k_pad)), constant_values=-1)
+    Lp = L + k_pad
+    n_k = Lp // block_k
+    qg = q.reshape(B, Hkv, G, D)                            # (B, Hkv, G, D)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, n_k=n_k,
+        window=window, softcap=softcap)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,                          # pos (B,)
+            grid=(B, Hkv, n_k),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, kb, pos: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, D), lambda b, h, kb, pos: (b, h, kb, 0)),
+                pl.BlockSpec((1, 1, block_k, D), lambda b, h, kb, pos: (b, h, kb, 0)),
+                pl.BlockSpec((1, block_k), lambda b, h, kb, pos: (b, kb)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, kb, pos: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, kt, vt, cp)
+    return out.reshape(B, 1, Hq, D)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: block-wise flash attention (causal / sliding-window / GQA).
+
+VMEM tiling: q block (block_q, head_dim), k/v blocks (block_k, head_dim);
+running (m, l, acc) scratch in VMEM; the (block_q, block_k) score tile lives
+only in registers/VMEM — the full S×S matrix is never materialized in HBM.
+Fully-masked k-blocks are skipped with ``pl.when`` (causal upper triangle and
+out-of-window bands contribute zero work on TPU).
+
+Layout: kernel operates on (B, H, S, D); the public wrapper transposes from
+the model's (B, S, H, D). GQA maps q-head h to kv-head h // group via the
+k/v BlockSpec index_map — kv blocks are DMA'd once per group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, n_k: int,
+                  causal: bool, window: Optional[int], softcap: float,
+                  kv_len: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qb * block_q
+    k_start = kb * block_k
+
+    # --- block-level reachability guard: skip fully-masked tiles -----------
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_start <= q_start + block_q - 1
+    if window is not None:
+        live &= k_start + block_k - 1 >= q_start - window + 1
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    q_pad = (-Sq) % block_q
+    k_pad = (-Skv) % block_k
+    qt = jnp.moveaxis(q, 2, 1)                              # (B, H, Sq, D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if q_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    Sq_p, Skv_p = Sq + q_pad, Skv + k_pad
+    n_q = Sq_p // block_q
+    n_k = Skv_p // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_k=n_k, causal=causal, window=window, softcap=softcap, kv_len=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qb, kb: (b, h, qb, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qb, kb: (b, h // G, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qb, kb: (b, h // G, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qb, kb: (b, h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :Sq, :]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,67 @@
+"""Public jit-friendly kernel wrappers with implementation dispatch.
+
+impl:
+  "xla"       — scalable pure-JAX (chunked flash) path; default on CPU and for
+                 the multi-pod dry-run (memory-safe lowering, same math).
+  "pallas"    — Pallas TPU kernels (compiled for TPU targets).
+  "interpret" — Pallas kernels in interpret mode (CPU correctness testing).
+
+Set globally via ``set_default_impl`` or per-call with ``impl=``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as _xla_attn
+
+_DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "xla")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "interpret"), impl
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,
+                    q_chunk=1024, k_chunk=1024, q_offset=0, impl=None):
+    impl = impl or _DEFAULT_IMPL
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            interpret=(impl == "interpret"))
+    return _xla_attn.chunked_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_chunk=q_chunk, k_chunk=k_chunk, q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, cache_pos, pos, *, window=None,
+                     softcap=0.0, impl=None):
+    impl = impl or _DEFAULT_IMPL
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(
+            q, k_cache, v_cache, cache_pos, pos, window=window,
+            softcap=softcap, interpret=(impl == "interpret"))
+    return _xla_attn.decode_attention(
+        q, k_cache, v_cache, cache_pos, pos, window=window, softcap=softcap)
+
+
+def embedding_bag(table, indices, weights=None, *, combiner="sum", impl=None):
+    """Fused embedding gather + pooling. table (R, D); indices (B, n); -> (B, D)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import embedding_bag as eb
+        return eb.embedding_bag(table, indices, weights, combiner=combiner,
+                                interpret=(impl == "interpret"))
+    from repro.kernels import ref
+    return ref.embedding_bag_ref(table, indices, weights, combiner=combiner)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def embedding_bag_ref(table, indices, weights=None, *, combiner="sum"):
+    """table (R, D); indices (B, n) int; weights (B, n) or None -> (B, D)."""
+    gathered = table[indices]                               # (B, n, D)
+    if weights is not None:
+        gathered = gathered * weights[..., None]
+    if combiner == "sum":
+        return jnp.sum(gathered, axis=1)
+    if combiner == "mean":
+        return jnp.mean(gathered, axis=1)
+    if combiner == "max":
+        return jnp.max(gathered, axis=1)
+    raise ValueError(combiner)
+
+
+def attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
+                  softcap: float = 0.0, q_offset: int = 0):
+    """Naive quadratic attention. q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    dpos = qpos[:, None] - kpos[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= dpos >= 0
+    if window is not None:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_pos, pos, *,
+                         window: Optional[int] = None, softcap: float = 0.0):
+    """q (B,1,Hq,D); caches (B,L,Hkv,D); cache_pos (B,L); pos (B,)."""
+    B, L, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32)) * (D ** -0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (cache_pos >= 0) & (cache_pos <= pos[:, None])
+    if window is not None:
+        valid &= cache_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)

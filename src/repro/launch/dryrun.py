@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh, record memory/cost analysis and the collective schedule.
+
+This process (and ONLY this process) fakes 512 host devices — the env var
+above must be set before any jax import. Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out experiments/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.registry import ARCHS, get_arch, get_shape
+from repro.launch import costs as costs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import ModelAPI, build_model
+from repro.sharding.policy import logical_spec, make_policy, use_policy
+from repro.train import optim as optim_mod
+from repro.train import trainer as trainer_mod
+
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the SPMD module.
+
+    The partitioned module's shapes are per-device shards, so the totals
+    approximate per-device collective traffic (ring algorithms move ~the
+    result size per device for all-reduce; all-gather results count the full
+    gathered tensor a device receives).
+    """
+    out: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        opm = None
+        for op in _COLL_OPS:
+            if f" {op}(" in s or f" {op}-start(" in s:
+                opm = op
+                break
+        if opm is None:
+            continue
+        lhs = s.split("=", 1)[1]
+        idx = lhs.find(f" {opm}")
+        result_type = lhs[:idx]
+        total = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_type))
+        out[opm] += total
+        out["count"] += 1
+    out["total"] = sum(out[op] for op in _COLL_OPS)
+    return out
+
+
+def _memory_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        val = getattr(ma, name, None)
+        if val is not None:
+            out[name] = int(val)
+    out["repr"] = str(ma)
+    return out
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in (ca or {}).items():
+        if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals", "optimal_seconds")
+                or k.startswith("bytes accessed")):
+            keep[k] = float(v)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+def batch_shardings(api: ModelAPI, shape: ShapeConfig, policy):
+    rules = {
+        "tokens": ("batch", None),
+        "targets": ("batch", None),
+        "frames": ("batch", None, None),
+    }
+    specs = api.input_specs(shape)
+    return {k: policy.sharding(rules[k]) for k in specs}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS bookkeeping: 6·N·D train, 2·N·D prefill/decode (MoE: active)."""
+    n = cfg.param_count(active_only=cfg.n_experts > 0)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch                     # decode: 1 token each
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, opt_name: str = "adam",
+               policy_overrides=None) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = make_policy(mesh, cfg, shape, overrides=policy_overrides)
+    api = build_model(cfg)
+    master = cfg.param_dtype == "bfloat16"
+    optimizer = optim_mod.adam(1e-3, master_weights=master) \
+        if opt_name == "adam" else optim_mod.make(opt_name, 1e-3)
+    spec_key = "adam_master" if (opt_name == "adam" and master) else opt_name
+
+    t0 = time.perf_counter()
+    with mesh, use_policy(policy):
+        in_specs = api.input_specs(shape)
+        b_shardings = batch_shardings(api, shape, policy)
+        if shape.kind == "train":
+            state_struct = jax.eval_shape(
+                lambda k: trainer_mod.make_train_state(api, optimizer, k),
+                jax.random.PRNGKey(0))
+            state_sh = logical_spec(
+                None, trainer_mod.train_state_specs(api, spec_key), policy)
+            step = trainer_mod.make_train_step(api, optimizer, remat=True)
+            jitted = jax.jit(step, in_shardings=(state_sh, b_shardings),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_struct, in_specs)
+            rec["jaxpr_flops"] = costs_mod.flops_of(step, state_struct, in_specs)
+        elif shape.kind == "prefill":
+            params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            params_sh = logical_spec(None, api.param_specs(), policy)
+            jitted = jax.jit(api.prefill, in_shardings=(params_sh, b_shardings))
+            lowered = jitted.lower(params_struct, in_specs)
+            rec["jaxpr_flops"] = costs_mod.flops_of(
+                api.prefill, params_struct, in_specs)
+        else:  # decode
+            params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            params_sh = logical_spec(None, api.param_specs(), policy)
+            cache_struct = jax.eval_shape(
+                lambda: api.init_cache(shape.global_batch, shape.seq_len,
+                                       jnp.bfloat16))
+            cache_sh = logical_spec(None, api.cache_specs(), policy)
+            tok_sh = {"tokens": policy.sharding(("batch", None))}
+            decode_fn = lambda params, cache, batch: api.decode_step(
+                params, cache, batch["tokens"])
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(params_sh, cache_sh, tok_sh),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_struct, cache_struct, in_specs)
+            rec["jaxpr_flops"] = costs_mod.flops_of(
+                decode_fn, params_struct, cache_struct, in_specs)
+        rec["lower_s"] = time.perf_counter() - t0
+        param_bytes = cfg.param_count() * (2.0 if cfg.param_dtype == "bfloat16"
+                                           else 4.0)
+        rec["analytic_collectives"] = costs_mod.analytic_collectives(
+            cfg, shape, policy, param_bytes)
+        rec["analytic_hbm"] = costs_mod.analytic_hbm_bytes(
+            cfg, shape, policy, param_bytes, rec["jaxpr_flops"] / mesh.size)
+
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+
+        rec["memory"] = _memory_dict(compiled)
+        rec["cost"] = _cost_dict(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        rec["collectives"] = collective_bytes_from_hlo(hlo)
+        rec["hlo_bytes_len"] = len(hlo)
+        rec["model_flops"] = model_flops(cfg, shape)
+        rec["params"] = cfg.param_count()
+        rec["params_active"] = cfg.param_count(active_only=cfg.n_experts > 0)
+        rec["n_devices"] = mesh.size
+
+    if verbose:
+        print(f"== {arch} × {shape_name} × {mesh_name} ==")
+        print("memory_analysis:", rec["memory"].get("repr", ""))
+        print("cost_analysis:", json.dumps(rec["cost"], indent=None))
+        print("collectives:", json.dumps(rec["collectives"]))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        from repro.configs.base import SHAPES
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}".replace("/", "_")
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print("skip (exists):", tag)
+                continue
+            try:
+                rec = lower_cell(arch, shape, multi_pod=mp)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print("FAILED:", tag, rec["error"])
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

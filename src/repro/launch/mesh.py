@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+Single pod: 16×16 = 256 chips ("data", "model").
+Multi-pod: 2×16×16 = 512 chips ("pod", "data", "model") — the "pod" axis is
+additional data parallelism across ICI-disjoint pods (DCN-connected), the
+elastic scale-out axis of the paper's horizontal scaling.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per chip, ring)
+HBM_PER_CHIP = 16e9               # bytes

@@ -1,0 +1,190 @@
+"""Scalable pure-JAX attention (chunked, flash-style accumulators).
+
+These are the XLA-lowered implementations used for CPU execution and for the
+multi-pod dry-run (memory-safe O(chunk) intermediates). The Pallas TPU kernels
+in ``repro.kernels`` compute the same math with explicit VMEM tiling;
+``repro.kernels.ops`` dispatches between them.
+
+Shapes: q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D); GQA via Hq = Hkv * group.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.policy import constrain
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def _block_attn(q, k, v, qpos, kpos, *, causal, window, softcap, scale):
+    """One (q-block × k-block) attention with flash accumulators returned.
+
+    q: (B, Cq, Hkv, G, D); k/v: (B, Ck, Hkv, D). Returns (o, m, l) where
+    o: unnormalized weighted values, m: row max, l: row sum-exp.
+
+    Inputs stay bf16 with f32 MXU accumulation (preferred_element_type):
+    casting inputs to f32 first makes GSPMD all-gather K/V at double width
+    (XLA hoists the convert above the collective).
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s * scale, softcap)
+    mask = jnp.ones((q.shape[1], k.shape[1]), dtype=bool)
+    dpos = qpos[:, None] - kpos[None, :]                   # (Cq, Ck)
+    if causal:
+        mask &= dpos >= 0
+    if window is not None:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                 # (B,H,G,Cq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m, l
+
+
+def _merge(acc, new):
+    """Merge two flash partials (o, m, l) -> combined."""
+    o1, m1, l1 = acc
+    o2, m2, l2 = new
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    # o has layout (B, Cq, Hkv, G, D); m/l have (B, Hkv, G, Cq)
+    w1 = jnp.transpose(a1, (0, 3, 1, 2))[..., None]
+    w2 = jnp.transpose(a2, (0, 3, 1, 2))[..., None]
+    o = o1 * w1 + o2 * w2
+    l = l1 * a1 + l2 * a2
+    return o, m, l
+
+
+def _finalize(o, m, l, dtype):
+    w = jnp.transpose(1.0 / jnp.maximum(l, 1e-30), (0, 3, 1, 2))[..., None]
+    return (o * w).astype(dtype)
+
+
+def chunked_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Flash-style chunked attention; O(chunk²) memory, exact result.
+
+    For ``window`` (local) attention, K/V are dynamically sliced to the
+    reachable band so HLO FLOPs/bytes stay O(S·W) — sub-quadratic, matching
+    the TPU kernel's work. Global attention scans all K blocks (standard
+    2× masked-FLOP overhead for causal, noted in the roofline bookkeeping).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+    dt = q.dtype
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    q_chunk = min(q_chunk, Sq)
+    while Sq % q_chunk:
+        q_chunk //= 2
+    n_q = Sq // q_chunk
+
+    if window is not None and Skv > (window + q_chunk):
+        # ----- local: per-q-chunk dynamic K/V band of static length W+Cq ----
+        # the band only reaches back `window` and forward to the chunk end,
+        # which is exact for causal sliding windows (the only form our
+        # architectures use); non-causal windows take the global path below
+        assert causal, "windowed attention requires causal=True (SWA/local)"
+        band = window + q_chunk
+
+        def q_step(_, qi):
+            q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+            qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+            start = jnp.clip(qi * q_chunk + q_chunk - band, 0, Skv - band)
+            k_blk = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpos = start + jnp.arange(band)
+            o, m, l = _block_attn(q_blk, k_blk, v_blk, qpos, kpos,
+                                  causal=causal, window=window,
+                                  softcap=softcap, scale=scale)
+            return None, _finalize(o, m, l, dt)
+
+        _, out = jax.lax.scan(q_step, None, jnp.arange(n_q))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, D)
+        return out
+
+    # ----- global (or short-enough local): scan q blocks × k blocks ---------
+    k_chunk = min(k_chunk, Skv)
+    while Skv % k_chunk:
+        k_chunk //= 2
+    n_k = Skv // k_chunk
+
+    def q_step(_, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(acc, ki):
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, axis=1)
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            new = _block_attn(q_blk, k_blk, v_blk, qpos, kpos,
+                              causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+            return _merge(acc, new), None
+
+        o0 = jnp.zeros((B, q_chunk, Hkv, G, D), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(k_step, (o0, m0, l0), jnp.arange(n_k))
+        return None, _finalize(o, m, l, dt)
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(n_q))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, D)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,              # (B, 1, Hq, D)
+    k_cache: jnp.ndarray,        # (B, L, Hkv, D)
+    v_cache: jnp.ndarray,        # (B, L, Hkv, D)
+    cache_pos: jnp.ndarray,      # (B, L) int32 absolute positions, -1 = empty
+    pos: jnp.ndarray,            # (B,) current absolute position
+    *, window: Optional[int] = None,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Single-token attention over a (possibly ring-buffer) KV cache.
+
+    Works for full caches and ring caches alike: masking is driven by the
+    stored absolute positions. The KV-cache seq dim may be mesh-sharded
+    ("kvseq"); softmax reduction then runs as a distributed flash-decode.
+    """
+    B, L, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(k_cache.dtype)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    valid = (cache_pos >= 0) & (cache_pos[:, :] <= pos[:, None])
+    if window is not None:
+        valid &= cache_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)

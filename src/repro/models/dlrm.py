@@ -1,0 +1,157 @@
+"""The paper's DLRM workloads: Wide&Deep (Model-X), xDeepFM (Model-Y), DCN (Model-Z).
+
+Sparse categorical features -> per-feature embedding tables -> pooled lookups
+(the paper's 30–48 % hot spot, served by the Pallas ``embedding_bag`` kernel)
+-> dense interaction network -> CTR logit. Tables are row-sharded over the
+"model" (parameter-server) axis, exactly as §2.1 describes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dlrm_models import DLRMConfig
+from repro.kernels import ops
+from repro.models.common import KeyGen, dense_init
+from repro.sharding.policy import constrain
+
+
+def init_dlrm(cfg: DLRMConfig, key) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    D = cfg.embed_dim
+    params: Dict[str, Any] = {
+        "tables": {f"t{i}": dense_init(kg(), (rows, D), D, jnp.float32)
+                   for i, rows in enumerate(cfg.table_rows)},
+    }
+    d_in = cfg.n_dense + cfg.n_tables * D
+    mlp = {}
+    prev = d_in
+    for li, h in enumerate(cfg.mlp_dims):
+        mlp[f"w{li}"] = dense_init(kg(), (prev, h), prev, jnp.float32)
+        mlp[f"b{li}"] = jnp.zeros((h,), jnp.float32)
+        prev = h
+    mlp["w_out"] = dense_init(kg(), (prev, 1), prev, jnp.float32)
+    mlp["b_out"] = jnp.zeros((1,), jnp.float32)
+    params["mlp"] = mlp
+
+    if cfg.kind == "wide_deep":
+        params["wide"] = {f"t{i}": jnp.zeros((rows, 1), jnp.float32)
+                          for i, rows in enumerate(cfg.table_rows)}
+        params["wide_dense"] = jnp.zeros((cfg.n_dense,), jnp.float32)
+    if cfg.kind == "dcn":
+        params["cross"] = {
+            f"w{li}": dense_init(kg(), (d_in,), d_in, jnp.float32)
+            for li in range(cfg.cross_layers)}
+        params["cross_b"] = {
+            f"b{li}": jnp.zeros((d_in,), jnp.float32)
+            for li in range(cfg.cross_layers)}
+    if cfg.kind == "xdeepfm":
+        cin = {}
+        prev_maps = cfg.n_tables
+        for li, maps in enumerate(cfg.cin_layers):
+            cin[f"w{li}"] = dense_init(
+                kg(), (prev_maps, cfg.n_tables, maps), prev_maps * cfg.n_tables,
+                jnp.float32)
+            prev_maps = maps
+        cin["w_out"] = dense_init(kg(), (sum(cfg.cin_layers),), sum(cfg.cin_layers),
+                                  jnp.float32)
+        params["cin"] = cin
+    return params
+
+
+def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "tables": {f"t{i}": ("vocab", None) for i in range(cfg.n_tables)},
+        "mlp": {},
+    }
+    prev = cfg.n_dense + cfg.n_tables * cfg.embed_dim
+    for li, h in enumerate(cfg.mlp_dims):
+        specs["mlp"][f"w{li}"] = (None, None)
+        specs["mlp"][f"b{li}"] = (None,)
+    specs["mlp"]["w_out"] = (None, None)
+    specs["mlp"]["b_out"] = (None,)
+    if cfg.kind == "wide_deep":
+        specs["wide"] = {f"t{i}": ("vocab", None) for i in range(cfg.n_tables)}
+        specs["wide_dense"] = (None,)
+    if cfg.kind == "dcn":
+        specs["cross"] = {f"w{li}": (None,) for li in range(cfg.cross_layers)}
+        specs["cross_b"] = {f"b{li}": (None,) for li in range(cfg.cross_layers)}
+    if cfg.kind == "xdeepfm":
+        specs["cin"] = {f"w{li}": (None, None, None) for li in range(len(cfg.cin_layers))}
+        specs["cin"]["w_out"] = (None,)
+    return specs
+
+
+def _field_embeddings(params, batch, cfg: DLRMConfig):
+    """Pooled per-field embeddings via embedding_bag. -> (B, n_tables, D)."""
+    outs = []
+    for i in range(cfg.n_tables):
+        idx = batch["sparse"][:, i, :]                      # (B, multi_hot)
+        pooled = ops.embedding_bag(params["tables"][f"t{i}"], idx,
+                                   combiner=cfg.pooling)
+        outs.append(pooled)
+    return jnp.stack(outs, axis=1)                          # (B, m, D)
+
+
+def _deep_mlp(params, x, cfg: DLRMConfig):
+    h = x
+    for li in range(len(cfg.mlp_dims)):
+        h = jax.nn.relu(h @ params["mlp"][f"w{li}"] + params["mlp"][f"b{li}"])
+    return (h @ params["mlp"]["w_out"] + params["mlp"]["b_out"])[:, 0]
+
+
+def dlrm_forward(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
+    """batch: {dense (B,n_dense) f32, sparse (B,m,hot) i32} -> logit (B,)."""
+    emb = _field_embeddings(params, batch, cfg)             # (B, m, D)
+    emb = constrain(emb, ("batch", None, None))
+    B = emb.shape[0]
+    x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
+
+    if cfg.kind == "wide_deep":
+        deep = _deep_mlp(params, x0, cfg)
+        wide = batch["dense"] @ params["wide_dense"]
+        for i in range(cfg.n_tables):
+            idx = batch["sparse"][:, i, :]
+            wide = wide + ops.embedding_bag(
+                params["wide"][f"t{i}"], idx, combiner="sum")[:, 0]
+        return deep + wide
+
+    if cfg.kind == "dcn":
+        x = x0
+        for li in range(cfg.cross_layers):
+            w = params["cross"][f"w{li}"]
+            b = params["cross_b"][f"b{li}"]
+            x = x0 * (x @ w)[:, None] + b + x
+        return _deep_mlp(params, x, cfg)
+
+    if cfg.kind == "xdeepfm":
+        Xk = emb                                             # (B, H0=m, D)
+        feats = []
+        for li in range(len(cfg.cin_layers)):
+            inter = jnp.einsum("bhd,bmd->bhmd", Xk, emb)
+            Xk = jnp.einsum("bhmd,hmn->bnd", inter, params["cin"][f"w{li}"])
+            feats.append(jnp.sum(Xk, axis=-1))               # (B, maps)
+        cin_out = jnp.concatenate(feats, axis=-1) @ params["cin"]["w_out"]
+        return _deep_mlp(params, x0, cfg) + cin_out
+
+    raise ValueError(cfg.kind)
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
+    """Binary cross-entropy with logits on CTR labels."""
+    logit = dlrm_forward(params, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def dlrm_auc(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
+    """Pairwise AUC estimate on one batch (for Fig 8 convergence tracking)."""
+    logit = dlrm_forward(params, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    pos = y[:, None] > y[None, :]
+    gt = (logit[:, None] > logit[None, :]).astype(jnp.float32)
+    eq = (logit[:, None] == logit[None, :]).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(pos), 1.0)
+    return jnp.sum(pos * (gt + 0.5 * eq)) / n

@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder backbone.
+
+Conv/audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, n_frames, d_model) from ``input_specs``.
+Sinusoidal absolute positions (works for any formal sequence length),
+bidirectional encoder self-attention, causal decoder self-attention +
+cross-attention to the encoder states.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import mlp as mlp_mod
+from repro.models.common import KeyGen, dense_init, dtype_of, pad_vocab, rms_norm
+from repro.models.transformer import (
+    attn_apply, attn_decode, init_attn, _stack_specs,
+)
+from repro.sharding.policy import constrain
+
+
+def sinusoid_positions(seq: int, d: int, offset=0) -> jnp.ndarray:
+    pos = offset + jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- init --------------------------------------------------------------------
+def _init_enc_layer(cfg: ModelConfig, keys: KeyGen, dtype):
+    d = cfg.d_model
+    attn_p, attn_s = init_attn(keys, cfg, dtype)
+    mlp_p, mlp_s = mlp_mod.init_mlp(keys, cfg, dtype)
+    p = {"ln1": jnp.zeros((d,), dtype), "attn": attn_p,
+         "ln2": jnp.zeros((d,), dtype), "mlp": mlp_p}
+    s = {"ln1": (None,), "attn": attn_s, "ln2": (None,), "mlp": mlp_s}
+    return p, s
+
+
+def _init_dec_layer(cfg: ModelConfig, keys: KeyGen, dtype):
+    d = cfg.d_model
+    p, s = _init_enc_layer(cfg, keys, dtype)
+    cross_p, cross_s = init_attn(keys, cfg, dtype)
+    p["lnx"] = jnp.zeros((d,), dtype)
+    p["cross"] = cross_p
+    s["lnx"] = (None,)
+    s["cross"] = cross_s
+    return p, s
+
+
+def init_encdec(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    kg = KeyGen(key)
+    Vp = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": dense_init(kg(), (Vp, d), d, dtype),
+        "enc_norm": jnp.zeros((d,), dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    enc_keys = jax.random.split(kg(), cfg.encoder_layers)
+    dec_keys = jax.random.split(kg(), cfg.num_layers)
+    params["enc"] = jax.vmap(lambda k: _init_enc_layer(cfg, KeyGen(k), dtype)[0])(enc_keys)
+    params["dec"] = jax.vmap(lambda k: _init_dec_layer(cfg, KeyGen(k), dtype)[0])(dec_keys)
+    return params
+
+
+def encdec_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    dummy = KeyGen(jax.random.PRNGKey(0))
+    return {
+        "embed": ("vocab", None),
+        "enc_norm": (None,),
+        "final_norm": (None,),
+        "enc": _stack_specs(_init_enc_layer(cfg, dummy, jnp.float32)[1]),
+        "dec": _stack_specs(_init_dec_layer(cfg, dummy, jnp.float32)[1]),
+    }
+
+
+# --- attention helpers ----------------------------------------------------------
+def _cross_attn(p, x, kv: Tuple[jnp.ndarray, jnp.ndarray]):
+    """x (B,S,d) queries; kv = (k, v) precomputed (B,F,K,Dh)."""
+    k, v = kv
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    out = ops.flash_attention(q, k.astype(dt), v.astype(dt),
+                              causal=False, window=None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y
+
+
+def cross_kv(p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bfd,dhk->bfhk", enc_out, p["wv"].astype(dt))
+    if "bv" in p:
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+# --- forward ----------------------------------------------------------------------
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, F, d_model) stub embeddings -> encoder states (B, F, d)."""
+    dt = dtype_of(cfg.compute_dtype)
+    x = frames.astype(dt) + sinusoid_positions(frames.shape[1], cfg.d_model).astype(dt)
+    x = constrain(x, ("batch", "qseq", None))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn_apply(lp["attn"], h, cfg, "global", causal=False)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_block(lp["mlp"], h, cfg)
+        return constrain(x, ("batch", "qseq", None)), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_full(params, enc_out, tokens, cfg: ModelConfig, *, remat: bool = False):
+    """Teacher-forced decoder pass. tokens (B,S) -> logits (B,S,Vp)."""
+    dt = dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dt)
+    x = x + sinusoid_positions(tokens.shape[1], cfg.d_model).astype(dt)
+    x = constrain(x, ("batch", "qseq", None))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn_apply(lp["attn"], h, cfg, "global", causal=True)
+        h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _cross_attn(lp["cross"], h, cross_kv(lp["cross"], enc_out))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_block(lp["mlp"], h, cfg)
+        return constrain(x, ("batch", "qseq", None)), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T.astype(x.dtype))
+    return constrain(logits, ("batch", "qseq", "vocab"))
+
+
+def forward_encdec(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode_full(params, enc_out, batch["tokens"], cfg, remat=remat)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    logits = forward_encdec(params, batch, cfg, remat=remat)
+    Vp = logits.shape[-1]
+    mask = (jnp.arange(Vp) < cfg.vocab_size)
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - tgt)
+
+
+# --- decode (serve_step) ------------------------------------------------------------
+def init_cache_encdec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    K, Dh, L = cfg.n_kv_heads, cfg.head_dim, cfg.num_layers
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "self": {"k": jnp.zeros((L, batch, max_len, K, Dh), dtype),
+                 "v": jnp.zeros((L, batch, max_len, K, Dh), dtype)},
+        "cross": {"k": jnp.zeros((L, batch, cfg.n_frames, K, Dh), dtype),
+                  "v": jnp.zeros((L, batch, cfg.n_frames, K, Dh), dtype)},
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig):
+    kv = {"k": (None, "batch", "kvseq", "kv_heads", None),
+          "v": (None, "batch", "kvseq", "kv_heads", None)}
+    ckv = {"k": (None, "batch", None, "kv_heads", None),
+           "v": (None, "batch", None, "kv_heads", None)}
+    return {"step": (), "pos": ("batch", "kvseq"), "self": kv, "cross": ckv}
+
+
+def fill_cross_cache(params, cache, frames, cfg: ModelConfig):
+    """Run the encoder and precompute per-layer cross K/V (serving prefill)."""
+    enc_out = encode(params, frames, cfg)
+
+    def per_layer(lp):
+        return cross_kv(lp["cross"], enc_out)
+
+    ks, vs = jax.vmap(per_layer, in_axes=0)(params["dec"])
+    new = dict(cache)
+    new["cross"] = {"k": ks.astype(cache["cross"]["k"].dtype),
+                    "v": vs.astype(cache["cross"]["v"].dtype)}
+    return new
+
+
+def decode_step_encdec(params, cache, tokens, cfg: ModelConfig):
+    """One decoder token. tokens (B,1) -> (logits, new_cache)."""
+    dt = dtype_of(cfg.compute_dtype)
+    step = cache["step"]
+    B = tokens.shape[0]
+    Lc = cache["pos"].shape[1]
+    new_cache = dict(cache)
+    idx = jnp.minimum(step, Lc - 1)
+    new_cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((B, 1), step, jnp.int32), idx, axis=1)
+
+    x = params["embed"][tokens].astype(dt)
+    x = x + sinusoid_positions(1, cfg.d_model, offset=step).astype(dt)
+    pos_tree = {"global": new_cache["pos"]}
+
+    def body(x, xs):
+        lp, sk, sv, ck, cv = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, kv = attn_decode(lp["attn"], h, {"k": sk, "v": sv},
+                            new_cache["pos"], step, cfg, "global")
+        x = x + y
+        h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _cross_attn(lp["cross"], h, (ck, cv))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp_block(lp["mlp"], h, cfg)
+        return x, (kv["k"], kv["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec"], cache["self"]["k"], cache["self"]["v"],
+         cache["cross"]["k"], cache["cross"]["v"]))
+    new_cache["self"] = {"k": nk, "v": nv}
+    new_cache["step"] = step + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T.astype(x.dtype))
+    return logits, new_cache

@@ -1,0 +1,138 @@
+"""Dense MLP and MoE blocks (sort-based, capacity-bounded expert dispatch)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, act_fn, dense_init
+from repro.sharding.policy import constrain
+
+
+# --- dense MLP ----------------------------------------------------------------
+def init_mlp(keys: KeyGen, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {"w1": dense_init(keys(), (d, ff), d, dtype),
+         "w2": dense_init(keys(), (ff, d), ff, dtype)}
+    s = {"w1": ("fsdp", "ffn"), "w2": ("ffn", "fsdp")}
+    if cfg.activation == "silu":
+        p["w3"] = dense_init(keys(), (d, ff), d, dtype)
+        s["w3"] = ("fsdp", "ffn")
+    if cfg.mlp_bias:
+        p["b1"] = jnp.zeros((ff,), dtype)
+        p["b2"] = jnp.zeros((d,), dtype)
+        s["b1"] = ("ffn",)
+        s["b2"] = (None,)
+    return p, s
+
+
+def mlp_block(p, x, cfg: ModelConfig):
+    act = act_fn(cfg.activation)
+    dt = x.dtype
+    h = x @ p["w1"].astype(dt)
+    if "b1" in p:
+        h = h + p["b1"].astype(dt)
+    if cfg.activation == "silu":
+        h = act(h) * (x @ p["w3"].astype(dt))
+    else:
+        h = act(h)
+    h = constrain(h, ("batch", "qseq", "ffn"))
+    y = h @ p["w2"].astype(dt)
+    if "b2" in p:
+        y = y + p["b2"].astype(dt)
+    return y
+
+
+# --- MoE ------------------------------------------------------------------------
+def init_moe(keys: KeyGen, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": dense_init(keys(), (d, E), d, jnp.float32),
+        "w1": dense_init(keys(), (E, d, ff), d, dtype),
+        "w2": dense_init(keys(), (E, ff, d), ff, dtype),
+    }
+    s = {
+        "router": ("fsdp", None),
+        "w1": ("expert", "fsdp", "expert_ffn"),
+        "w2": ("expert", "expert_ffn", "fsdp"),
+    }
+    if cfg.activation == "silu":
+        p["w3"] = dense_init(keys(), (E, d, ff), d, dtype)
+        s["w3"] = ("expert", "fsdp", "expert_ffn")
+    return p, s
+
+
+def moe_block(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-local, gather-only top-k expert dispatch with capacity dropping.
+
+    x: (B, S, d) -> (out, aux_loss). Each batch row is a dispatch *group*
+    (groups are batch-sharded, so all routing stays shard-local under SPMD).
+    Every data movement is a gather (sort + take_along_axis; the inverse
+    permutation is argsort(argsort)) — scatter-based dispatch over the global
+    token dim forced GSPMD to all-reduce full (T·k, d) buffers (measured
+    34 GB/op on granite-moe); the gather form lowers with zero collectives.
+    Expert FFNs run as batched einsums on the MXU.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    act = act_fn(cfg.activation)
+    dt = x.dtype
+    P = S * k
+
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                 # (B, S, E)
+    top_g, top_i = jax.lax.top_k(probs, k)                  # (B, S, k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style, over all tokens)
+    frac_routed = jnp.mean(
+        jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(2), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_routed / k * mean_prob)
+
+    cap = int(max(k, (S * k * cfg.capacity_factor) / E))
+    cap = min(((cap + 7) // 8) * 8, P)
+
+    pair_e = top_i.reshape(B, P)                            # (B, S*k)
+    pair_g = top_g.reshape(B, P)
+    pair_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S), k)[None, :], (B, P))
+
+    order = jnp.argsort(pair_e, axis=1)                     # stable per group
+    inv_order = jnp.argsort(order, axis=1)                  # inverse perm
+    se = jnp.take_along_axis(pair_e, order, axis=1)
+    st = jnp.take_along_axis(pair_t, order, axis=1)
+
+    counts = jnp.sum(pair_e[:, :, None] == jnp.arange(E)[None, None], axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts            # (B, E) exclusive
+    slot = jnp.arange(P)[None, :] - jnp.take_along_axis(starts, se, axis=1)
+    keep = slot < cap
+    pos = jnp.where(keep, se * cap + slot, E * cap)         # sentinel = drop
+
+    # token index for each (expert, capacity-slot): pure gathers
+    idx_ec = starts[:, :, None] + jnp.arange(cap)[None, None, :]   # (B,E,cap)
+    valid_ec = jnp.arange(cap)[None, None, :] < counts[:, :, None]
+    idx_flat = jnp.clip(idx_ec.reshape(B, E * cap), 0, P - 1)
+    tok_at = jnp.take_along_axis(st, idx_flat, axis=1)      # (B, E*cap)
+    xe = jnp.take_along_axis(x, tok_at[..., None], axis=1)  # (B, E*cap, d)
+    xe = jnp.where(valid_ec.reshape(B, E * cap)[..., None], xe, 0)
+    xe = xe.reshape(B, E, cap, d)
+    xe = constrain(xe, ("batch", "expert", None, None))
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w1"].astype(dt))
+    if cfg.activation == "silu":
+        h = act(h) * jnp.einsum("gecd,edf->gecf", xe, p["w3"].astype(dt))
+    else:
+        h = act(h)
+    h = constrain(h, ("batch", "expert", None, "expert_ffn"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(dt))  # (B,E,cap,d)
+
+    ye_pad = jnp.concatenate(
+        [ye.reshape(B, E * cap, d), jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+    pair_pos = jnp.take_along_axis(pos, inv_order, axis=1)  # original order
+    vals = jnp.take_along_axis(ye_pad, pair_pos[..., None], axis=1)  # (B,P,d)
+    out = jnp.sum(vals.reshape(B, S, k, d)
+                  * pair_g.reshape(B, S, k, 1).astype(dt), axis=2)
+    return out.astype(dt), aux

@@ -1,0 +1,98 @@
+"""Unified model API: one object per arch exposing init/loss/prefill/decode.
+
+Used by the trainer, the serving engine, and the multi-pod dry-run. All
+methods are pure functions of pytrees, safe to ``jax.jit``/``pjit``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import dtype_of
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    param_specs: Callable[[], Any]
+    loss: Callable[..., jnp.ndarray]          # (params, batch, remat=False)
+    prefill: Callable[..., jnp.ndarray]       # (params, batch) -> logits
+    init_cache: Callable[..., Any]            # (batch, max_len, dtype)
+    cache_specs: Callable[[], Any]
+    decode_step: Callable[..., Any]           # (params, cache, tokens)
+    input_specs: Callable[[ShapeConfig], Dict[str, jax.ShapeDtypeStruct]]
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+# --- decoder-only families --------------------------------------------------
+def _build_lm(cfg: ModelConfig) -> ModelAPI:
+    def input_specs(shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        # decode: one new token; the KV cache (length S) is a separate input
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: tf_mod.init_lm(cfg, key),
+        param_specs=lambda: tf_mod.lm_param_specs(cfg),
+        loss=lambda params, batch, remat=False: tf_mod.lm_loss(
+            params, batch, cfg, remat=remat),
+        prefill=lambda params, batch: tf_mod.forward_lm(
+            params, batch["tokens"], cfg)[0],
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: tf_mod.init_cache_lm(
+            cfg, batch, max_len, dtype),
+        cache_specs=lambda: tf_mod.lm_cache_specs(cfg),
+        decode_step=lambda params, cache, tokens: tf_mod.decode_step_lm(
+            params, cache, tokens, cfg),
+        input_specs=input_specs,
+    )
+
+
+# --- encoder-decoder (whisper) -------------------------------------------------
+def _build_encdec(cfg: ModelConfig) -> ModelAPI:
+    def input_specs(shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        frames = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model),
+                                      dtype_of(cfg.compute_dtype))
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: encdec_mod.init_encdec(cfg, key),
+        param_specs=lambda: encdec_mod.encdec_param_specs(cfg),
+        loss=lambda params, batch, remat=False: encdec_mod.encdec_loss(
+            params, batch, cfg, remat=remat),
+        prefill=lambda params, batch: encdec_mod.forward_encdec(params, batch, cfg),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: encdec_mod.init_cache_encdec(
+            cfg, batch, max_len, dtype),
+        cache_specs=lambda: encdec_mod.encdec_cache_specs(cfg),
+        decode_step=lambda params, cache, tokens: encdec_mod.decode_step_encdec(
+            params, cache, tokens, cfg),
+        input_specs=input_specs,
+    )

@@ -1,0 +1,124 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block.
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ ξ_t),  a_t = exp(-c·softplus(Λ)·r_t)
+
+with block-diagonal recurrence/input gates (one block per head), a causal
+depthwise temporal conv on the recurrent branch, and a GeLU-gated linear
+branch. Train/prefill uses an associative scan (log-depth on TPU); decode is
+the O(1) recurrent update. [arXiv:2402.19427]
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init
+from repro.sharding.policy import constrain
+
+_C = 8.0
+CONV_W = 4
+
+
+def init_rglru(keys: KeyGen, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    nb = max(cfg.n_heads, 1)
+    bw = lru // nb
+    p = {
+        "in_y": dense_init(keys(), (d, lru), d, dtype),
+        "in_x": dense_init(keys(), (d, lru), d, dtype),
+        "conv_w": dense_init(keys(), (CONV_W, lru), CONV_W, dtype),
+        "conv_b": jnp.zeros((lru,), dtype),
+        "gate_a_w": dense_init(keys(), (nb, bw, bw), bw, jnp.float32),
+        "gate_a_b": jnp.zeros((nb, bw), jnp.float32),
+        "gate_i_w": dense_init(keys(), (nb, bw, bw), bw, jnp.float32),
+        "gate_i_b": jnp.zeros((nb, bw), jnp.float32),
+        # Λ init so that a ≈ 0.9..0.999 at r=0.5 (Griffin appendix)
+        "lam": jnp.linspace(0.3, 1.5, lru, dtype=jnp.float32),
+        "out": dense_init(keys(), (lru, d), lru, dtype),
+    }
+    s = {
+        "in_y": ("fsdp", "inner"), "in_x": ("fsdp", "inner"),
+        "conv_w": (None, "inner"), "conv_b": ("inner",),
+        "gate_a_w": (None, None, None), "gate_a_b": (None, None),
+        "gate_i_w": (None, None, None), "gate_i_b": (None, None),
+        "lam": (None,), "out": ("inner", "fsdp"),
+    }
+    return p, s
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W)) + b
+
+
+def _gates(p, xi):
+    """Block-diagonal gate projections. xi: (..., lru) -> (r, i) in f32."""
+    nb, bw, _ = p["gate_a_w"].shape
+    xb = xi.astype(jnp.float32).reshape(*xi.shape[:-1], nb, bw)
+    r = jax.nn.sigmoid(jnp.einsum("...nb,nbc->...nc", xb, p["gate_a_w"]) + p["gate_a_b"])
+    i = jax.nn.sigmoid(jnp.einsum("...nb,nbc->...nc", xb, p["gate_i_w"]) + p["gate_i_b"])
+    return r.reshape(xi.shape), i.reshape(xi.shape)
+
+
+def _log_a(p, r):
+    return -_C * jax.nn.softplus(p["lam"]) * r
+
+
+def rglru_forward(p, x, cfg: ModelConfig, h0=None):
+    """Train/prefill. x: (B, L, d) -> (out, final_h)."""
+    dt = x.dtype
+    y = jax.nn.gelu(x @ p["in_y"].astype(dt), approximate=True)
+    xi = _causal_conv(x @ p["in_x"].astype(dt), p["conv_w"].astype(dt),
+                      p["conv_b"].astype(dt))
+    xi = constrain(xi, ("batch", "qseq", "inner"))
+    r, i = _gates(p, xi)
+    log_a = _log_a(p, r)                                     # (B,L,lru) f32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xi.astype(jnp.float32))
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = Hs
+    out = (h.astype(x.dtype) * y) @ p["out"].astype(dt)
+    return out, h[:, -1]
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, lru), dtype),
+        "h": jnp.zeros((batch, lru), jnp.float32),
+    }
+
+
+def rglru_cache_specs(cfg: ModelConfig):
+    return {"conv": ("batch", None, "inner"), "h": ("batch", "inner")}
+
+
+def rglru_decode(p, x, cache, cfg: ModelConfig):
+    """One-token step. x: (B, 1, d) -> (out, new_cache)."""
+    dt = x.dtype
+    y = jax.nn.gelu(x[:, 0] @ p["in_y"].astype(dt), approximate=True)
+    xi_lin = x[:, 0] @ p["in_x"].astype(dt)                  # (B, lru)
+    conv_in = jnp.concatenate([cache["conv"].astype(dt), xi_lin[:, None, :]], axis=1)
+    xi = jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"].astype(dt)) \
+        + p["conv_b"].astype(dt)
+    r, i = _gates(p, xi)
+    log_a = _log_a(p, r)
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xi.astype(jnp.float32))
+    out = ((h.astype(x.dtype) * y) @ p["out"].astype(dt))[:, None, :]
+    return out, {"conv": conv_in[:, 1:, :].astype(cache["conv"].dtype), "h": h}

@@ -1,0 +1,193 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill + recurrent decode.
+
+Chunked algorithm (matmul-dominant, MXU-friendly): within-chunk quadratic
+attention-like term + inter-chunk state recurrence (lax.scan over chunks).
+Follows the minimal SSD reference of arXiv:2405.21060 §6.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init, rms_norm
+from repro.sharding.policy import constrain
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_ssm(keys: KeyGen, cfg: ModelConfig, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    cd = conv_dim(cfg)
+    p = {
+        "in_proj": dense_init(keys(), (d, 2 * di + 2 * G * N + H), d, dtype),
+        "conv_w": dense_init(keys(), (cfg.ssm_conv_width, cd), cfg.ssm_conv_width, dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(keys(), (di, d), di, dtype),
+    }
+    s = {
+        "in_proj": ("fsdp", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "dt_bias": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "norm_w": ("inner",),
+        "out_proj": ("inner", "fsdp"),
+    }
+    return p, s
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B, L, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _segsum(dA):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} dA[..., k] (i>=j)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]               # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD scan. x:(B,L,H,P) dt:(B,L,H) A:(H,) Bm/Cm:(B,L,G,N) -> y,(final state)."""
+    B, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    L0 = L
+    if L % Q:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input => exact no-op
+        pad = Q - L % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = L + pad
+    nc = L // Q
+
+    xc = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, G, N).astype(jnp.float32)
+
+    dA = dtc * A                                            # (B,nc,Q,H), negative
+    dA_hq = jnp.moveaxis(dA, -1, -2)                        # (B,nc,H,Q)
+    cum = jnp.cumsum(dA_hq, axis=-1)                        # (B,nc,H,Q)
+
+    # ---- within-chunk (quadratic, attention-like) --------------------------
+    Lmat = jnp.exp(_segsum(dA_hq))                          # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc)       # (B,nc,G,Q,Q)
+    scores = jnp.repeat(scores, rep, axis=2)                # (B,nc,H,Q,Q)
+    M = scores * Lmat * jnp.moveaxis(dtc, -1, -2)[..., None, :]
+    Yd = jnp.einsum("bchij,bcjhp->bcihp", M, xc)            # (B,nc,Q,H,P)
+
+    # ---- chunk states -------------------------------------------------------
+    decay_states = jnp.exp(cum[..., -1:] - cum)             # (B,nc,H,Q)
+    sdt = jnp.moveaxis(decay_states * jnp.moveaxis(dtc, -1, -2), -1, -2)
+    S = jnp.einsum("bcjgn,bcjh,bcjhp->bchpn", Bc, sdt, xc)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    chunk_decay = jnp.exp(cum[..., -1])                     # (B,nc,H)
+
+    def step(carry, inp):
+        S_c, decay_c = inp                                   # (B,H,P,N), (B,H)
+        new = carry * decay_c[..., None, None] + S_c
+        return new, carry                                    # emit state *before* chunk
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,nc,H,P,N)
+
+    # ---- inter-chunk output -------------------------------------------------
+    state_decay = jnp.exp(cum)                              # (B,nc,H,Q)
+    Ch = jnp.repeat(Cc, rep, axis=3)                        # (B,nc,Q,H,N)
+    Yo = jnp.einsum("bcihn,bchpn,bchi->bcihp", Ch, prev_states, state_decay)
+
+    y = (Yd + Yo).reshape(B, L, H, P)[:, :L0]
+    return y, final_state
+
+
+def ssm_forward(p, x, cfg: ModelConfig):
+    """Full Mamba-2 block, train/prefill. x: (B, L, d) -> (B, L, d)."""
+    B, L, d = x.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    cdt = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"].astype(cdt),
+                                   p["conv_b"].astype(cdt)))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = constrain(xs, ("batch", "qseq", "inner"))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(
+        xs.reshape(B, L, H, P), dt, A,
+        Bm.reshape(B, L, G, N), Cm.reshape(B, L, G, N), cfg.ssm_chunk)
+    y = y + p["D"][:, None] * xs.reshape(B, L, H, P).astype(jnp.float32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cdt)
+
+
+# --- decode -----------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    cd = conv_dim(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cd), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+                           jnp.float32),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig):
+    return {"conv": ("batch", None, "inner"),
+            "state": ("batch", "ssm_heads", None, None)}
+
+
+def ssm_decode(p, x, cache, cfg: ModelConfig):
+    """One-token step. x: (B, 1, d) -> (y, new_cache)."""
+    B = x.shape[0]
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    cdt = x.dtype
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(cdt)              # (B, ...)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+
+    conv_in = jnp.concatenate([cache["conv"].astype(cdt), xBC[:, None, :]], axis=1)
+    xBC = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"].astype(cdt))
+                      + p["conv_b"].astype(cdt))
+    new_conv = conv_in[:, 1:, :]
+
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                     # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1)     # (B,H,N)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1)
+    state = cache["state"] * dA[..., None, None] \
+        + dt[..., None, None] * xh[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + p["D"][:, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(cdt))[:, None, :]
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "state": state}

@@ -1,0 +1,410 @@
+"""Decoder-only LM covering dense / moe / ssm / hybrid / vlm families.
+
+Layers are organized as repeating *pattern groups* (e.g. gemma3's 5×local +
+1×global) with per-position stacked parameters, scanned with ``lax.scan`` so
+the lowered HLO stays O(pattern) instead of O(num_layers). Remainder layers
+(num_layers % len(pattern)) are applied unstacked.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import mlp as mlp_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    KeyGen, act_fn, apply_rope, dense_init, dtype_of, pad_vocab, pattern_split,
+    rms_norm,
+)
+from repro.sharding.policy import constrain
+
+
+# ===========================================================================
+# attention sub-block
+# ===========================================================================
+def init_attn(keys: KeyGen, cfg: ModelConfig, dtype):
+    d, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(keys(), (d, H, Dh), d, dtype),
+        "wk": dense_init(keys(), (d, K, Dh), d, dtype),
+        "wv": dense_init(keys(), (d, K, Dh), d, dtype),
+        "wo": dense_init(keys(), (H, Dh, d), H * Dh, dtype),
+    }
+    s = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), dtype)
+        p["k_norm"] = jnp.zeros((Dh,), dtype)
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H, Dh), dtype)
+        p["bv"] = jnp.zeros((K, Dh), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+        s["bq"] = ("heads", None)
+        s["bv"] = ("kv_heads", None)
+        s["bo"] = (None,)
+    return p, s
+
+
+def _rope_theta(cfg: ModelConfig, kind: str) -> float:
+    if kind == "local" and cfg.rope_local_theta is not None:
+        return cfg.rope_local_theta
+    return cfg.rope_theta
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, kind: str):
+    rope = cfg.use_rope
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        theta = _rope_theta(cfg, kind)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, kind: str, q_offset: int = 0,
+               causal: bool = True):
+    """Full-sequence attention (train/prefill)."""
+    B, S, _ = x.shape
+    positions = q_offset + jnp.arange(S)
+    q, k, v = _project_qkv(p, x, cfg, positions, kind)
+    q = constrain(q, ("batch", "qseq", "heads", None))
+    window = cfg.local_window if kind == "local" else None
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.logit_softcap, q_offset=q_offset)
+    out = constrain(out, ("batch", "qseq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y
+
+
+def attn_decode(p, x, kv_cache, cache_pos, step, cfg: ModelConfig, kind: str):
+    """One-token attention. kv_cache: {"k","v"} (B, Lc, K, Dh); step scalar."""
+    B = x.shape[0]
+    Lc = kv_cache["k"].shape[1]
+    pos_b = jnp.full((B,), step, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, pos_b[:, None], kind)
+    idx = jnp.mod(step, Lc) if kind == "local" else jnp.minimum(step, Lc - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k.astype(kv_cache["k"].dtype), idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v.astype(kv_cache["v"].dtype), idx, axis=1)
+    window = cfg.local_window if kind == "local" else None
+    out = ops.decode_attention(q, k_cache, v_cache, cache_pos, pos_b,
+                               window=window, softcap=cfg.logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ===========================================================================
+# layer init / apply / decode by kind
+# ===========================================================================
+def init_layer(kind: str, cfg: ModelConfig, keys: KeyGen, dtype):
+    d = cfg.d_model
+    if kind == "ssm":
+        pp, ss = ssm_mod.init_ssm(keys, cfg, dtype)
+        return {"ln1": jnp.zeros((d,), dtype), "ssm": pp}, \
+               {"ln1": (None,), "ssm": ss}
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype)}
+    s: Dict[str, Any] = {"ln1": (None,), "ln2": (None,)}
+    if kind == "recurrent":
+        p["rec"], s["rec"] = rglru_mod.init_rglru(keys, cfg, dtype)
+    else:
+        p["attn"], s["attn"] = init_attn(keys, cfg, dtype)
+    if cfg.n_experts and kind in ("global", "local"):
+        p["moe"], s["moe"] = mlp_mod.init_moe(keys, cfg, dtype)
+    else:
+        p["mlp"], s["mlp"] = mlp_mod.init_mlp(keys, cfg, dtype)
+    return p, s
+
+
+def apply_layer(kind: str, p, x, cfg: ModelConfig, q_offset: int = 0):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        x = x + ssm_mod.ssm_forward(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        return x, aux
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "recurrent":
+        y, _ = rglru_mod.rglru_forward(p["rec"], h, cfg)
+    else:
+        y = attn_apply(p["attn"], h, cfg, kind, q_offset)
+    x = x + y
+    x = constrain(x, ("batch", "qseq", None))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = mlp_mod.moe_block(p["moe"], h, cfg)
+    else:
+        y = mlp_mod.mlp_block(p["mlp"], h, cfg)
+    x = x + y
+    x = constrain(x, ("batch", "qseq", None))
+    return x, aux
+
+
+def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    if kind == "recurrent":
+        return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    Lc = min(cfg.local_window, max_len) if kind == "local" else max_len
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, Lc, K, Dh), dtype),
+            "v": jnp.zeros((batch, Lc, K, Dh), dtype)}
+
+
+def layer_cache_specs(kind: str, cfg: ModelConfig):
+    if kind == "ssm":
+        return ssm_mod.ssm_cache_specs(cfg)
+    if kind == "recurrent":
+        return rglru_mod.rglru_cache_specs(cfg)
+    return {"k": ("batch", "kvseq", "kv_heads", None),
+            "v": ("batch", "kvseq", "kv_heads", None)}
+
+
+def decode_layer(kind: str, p, x, cache, pos_tree, step, cfg: ModelConfig):
+    """Returns (x, new_cache). pos_tree: {"global": (B,Lg), "local": (B,Ll)}."""
+    if kind == "ssm":
+        y, cache = ssm_mod.ssm_decode(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), cache, cfg)
+        return x + y, cache
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "recurrent":
+        y, cache = rglru_mod.rglru_decode(p["rec"], h, cache, cfg)
+    else:
+        y, cache = attn_decode(p["attn"], h, cache, pos_tree[kind], step, cfg, kind)
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = mlp_mod.moe_block(p["moe"], h, cfg)
+    else:
+        y = mlp_mod.mlp_block(p["mlp"], h, cfg)
+    return x + y, cache
+
+
+# ===========================================================================
+# whole-model init / specs
+# ===========================================================================
+def _stack_specs(spec_tree):
+    return jax.tree.map(
+        lambda t: (None,) + t, spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x))
+
+
+def init_lm(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    kg = KeyGen(key)
+    Vp = pad_vocab(cfg.vocab_size)
+    d = cfg.d_model
+    n_groups, pattern, rest = pattern_split(cfg)
+
+    params: Dict[str, Any] = {
+        "embed": dense_init(kg(), (Vp, d), d, dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kg(), (d, Vp), d, dtype)
+
+    pattern_params = []
+    for i, kind in enumerate(pattern):
+        keys_arr = jax.random.split(kg(), n_groups)
+        def one(k, kind=kind):
+            return init_layer(kind, cfg, KeyGen(k), dtype)[0]
+        pattern_params.append(jax.vmap(one)(keys_arr))
+    params["pattern"] = pattern_params
+    params["rest"] = [init_layer(kind, cfg, kg, dtype)[0] for kind in rest]
+    return params
+
+
+def lm_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    n_groups, pattern, rest = pattern_split(cfg)
+    dummy = KeyGen(jax.random.PRNGKey(0))
+    # vocab-parallel embedding (Megatron-style): rows sharded over the model
+    # axis only. Sharding d over "data" too makes GSPMD all-gather the whole
+    # table for the logits matmul (measured 1.6 GB/step on llama) — d stays
+    # replicated; the table is small once vocab-sharded.
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", None),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = (None, "vocab")
+    specs["pattern"] = [
+        _stack_specs(init_layer(kind, cfg, dummy, jnp.float32)[1]) for kind in pattern
+    ]
+    specs["rest"] = [init_layer(kind, cfg, dummy, jnp.float32)[1] for kind in rest]
+    return specs
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+def unembed(params, x, cfg: ModelConfig):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return constrain(logits, ("batch", "qseq", "vocab"))
+
+
+def forward_lm(params, tokens, cfg: ModelConfig, *, remat: bool = False):
+    """tokens (B, S) -> (logits (B, S, Vp), aux_loss)."""
+    n_groups, pattern, rest = pattern_split(cfg)
+    x = embed_tokens(params, tokens, cfg)
+    x = constrain(x, ("batch", "qseq", None))
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        for i, kind in enumerate(pattern):
+            x, a = apply_layer(kind, gparams[i], x, cfg)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    if n_groups > 0:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["pattern"])
+    else:
+        aux = aux0
+    for p, kind in zip(params["rest"], rest):
+        x, a = apply_layer(kind, p, x, cfg)
+        aux = aux + a
+    return unembed(params, x, cfg), aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    """batch: {"tokens": (B,S), "targets": (B,S)} -> scalar mean xent."""
+    logits, aux = forward_lm(params, batch["tokens"], cfg, remat=remat)
+    Vp = logits.shape[-1]
+    mask = (jnp.arange(Vp) < cfg.vocab_size)
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - tgt)
+    return nll + cfg.router_aux_weight * aux
+
+
+# ===========================================================================
+# decode (serve_step)
+# ===========================================================================
+def init_cache_lm(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_groups, pattern, rest = pattern_split(cfg)
+    cache: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    kinds = set(cfg.layer_kinds)
+    if "global" in kinds:
+        cache["global_pos"] = jnp.full((batch, max_len), -1, jnp.int32)
+    if "local" in kinds:
+        Ll = min(cfg.local_window, max_len)
+        cache["local_pos"] = jnp.full((batch, Ll), -1, jnp.int32)
+
+    def stacked(kind):
+        one = init_layer_cache(kind, cfg, batch, max_len, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one)
+
+    cache["pattern"] = [stacked(kind) for kind in pattern]
+    cache["rest"] = [init_layer_cache(kind, cfg, batch, max_len, dtype) for kind in rest]
+    return cache
+
+
+def lm_cache_specs(cfg: ModelConfig):
+    n_groups, pattern, rest = pattern_split(cfg)
+    specs: Dict[str, Any] = {"step": ()}
+    kinds = set(cfg.layer_kinds)
+    if "global" in kinds:
+        specs["global_pos"] = ("batch", "kvseq")
+    if "local" in kinds:
+        specs["local_pos"] = ("batch", None)
+    specs["pattern"] = [_stack_specs(layer_cache_specs(kind, cfg)) for kind in pattern]
+    specs["rest"] = [layer_cache_specs(kind, cfg) for kind in rest]
+    return specs
+
+
+def _cache_pos_views(cache):
+    views = {}
+    if "global_pos" in cache:
+        views["global"] = cache["global_pos"]
+    if "local_pos" in cache:
+        views["local"] = cache["local_pos"]
+    return views
+
+
+def decode_step_lm(params, cache, tokens, cfg: ModelConfig):
+    """One decode step. tokens (B, 1) -> (logits (B, 1, Vp), new_cache)."""
+    n_groups, pattern, rest = pattern_split(cfg)
+    step = cache["step"]
+    B = tokens.shape[0]
+    new_cache = dict(cache)
+
+    # update position rings first so this step's K/V slot is valid
+    if "global_pos" in cache:
+        Lg = cache["global_pos"].shape[1]
+        idx = jnp.minimum(step, Lg - 1)
+        new_cache["global_pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["global_pos"], jnp.full((B, 1), step, jnp.int32), idx, axis=1)
+    if "local_pos" in cache:
+        Ll = cache["local_pos"].shape[1]
+        idx = jnp.mod(step, Ll)
+        new_cache["local_pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["local_pos"], jnp.full((B, 1), step, jnp.int32), idx, axis=1)
+    pos_tree = _cache_pos_views(new_cache)
+
+    x = embed_tokens(params, tokens, cfg)
+
+    def group_body(x, xs):
+        gparams, gcache = xs
+        new_gcache = []
+        for i, kind in enumerate(pattern):
+            x, c = decode_layer(kind, gparams[i], x, gcache[i], pos_tree, step, cfg)
+            new_gcache.append(c)
+        return x, new_gcache
+
+    if n_groups > 0:
+        x, new_pattern = jax.lax.scan(
+            group_body, x, (params["pattern"], cache["pattern"]))
+        new_cache["pattern"] = new_pattern
+    new_rest = []
+    for p, c, kind in zip(params["rest"], cache["rest"], rest):
+        x, c = decode_layer(kind, p, x, c, pos_tree, step, cfg)
+        new_rest.append(c)
+    new_cache["rest"] = new_rest
+    new_cache["step"] = step + 1
+    return unembed(params, x, cfg), new_cache
+
+
+def prefill_into_cache(params, cache, tokens, cfg: ModelConfig):
+    """Fill caches by running decode_step over the prompt (small-scale serving).
+
+    Exact but sequential; used by tests/examples on reduced configs. Production
+    prefill lowers ``forward_lm`` (the `prefill_*` dry-run cells).
+    """
+    def body(cache, tok):
+        logits, cache = decode_step_lm(params, cache, tok[:, None], cfg)
+        return cache, logits[:, 0]
+
+    cache, logits = jax.lax.scan(body, cache, jnp.moveaxis(tokens, 1, 0))
+    return cache, jnp.moveaxis(logits, 0, 1)

@@ -1,0 +1,103 @@
+"""Batched serving engine: slot-based continuous batching over a shared KV cache.
+
+Requests enter a queue; the engine keeps ``batch_size`` decode slots. Each
+step decodes one token for every active slot (a single jit'd ``decode_step``),
+emits finished sequences (EOS or max tokens), and refills free slots from the
+queue by prefilling the prompt into that slot's cache region.
+
+Note: for simplicity the engine's cache is per-slot (one shared pytree with
+batch dim = slots); prefill uses the sequential ``prefill_into_cache`` path on
+CPU-sized models. Production prefill lowers the chunked ``prefill`` graph.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelAPI
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: List[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, api: ModelAPI, params, *, slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.api = api
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.queue: collections.deque[Request] = collections.deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.budget: List[int] = [0] * slots
+        self.outputs: Dict[int, Completion] = {}
+        self.caches = [api.init_cache(1, max_len, jnp.float32)
+                       for _ in range(slots)]
+        self.next_token = [0] * slots
+        self._decode = jax.jit(api.decode_step)
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        from repro.models.transformer import prefill_into_cache
+        cache = self.api.init_cache(1, self.max_len, jnp.float32)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        cache, logits = prefill_into_cache(self.params, cache, toks, self.api.cfg)
+        self.caches[slot] = cache
+        self.active[slot] = req
+        self.budget[slot] = req.max_new_tokens
+        self.outputs[req.rid] = Completion(req.rid)
+        last = logits[0, -1]
+        self.next_token[slot] = int(jnp.argmax(last))
+
+    def _refill(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                self._prefill_slot(slot, self.queue.popleft())
+
+    def step(self) -> int:
+        """One decode step across all active slots; returns #active."""
+        self._refill()
+        n_active = 0
+        for slot in range(self.slots):
+            req = self.active[slot]
+            if req is None:
+                continue
+            n_active += 1
+            tok = jnp.full((1, 1), self.next_token[slot], jnp.int32)
+            logits, self.caches[slot] = self._decode(self.params,
+                                                     self.caches[slot], tok)
+            out = self.outputs[req.rid]
+            out.tokens.append(self.next_token[slot])
+            nxt = int(jnp.argmax(logits[0, -1]))
+            self.next_token[slot] = nxt
+            self.budget[slot] -= 1
+            done = self.budget[slot] <= 0 or (req.eos_id is not None and nxt == req.eos_id)
+            if done:
+                self.active[slot] = None
+        self.steps += 1
+        return n_active
+
+    def run(self) -> Dict[int, Completion]:
+        while self.queue or any(a is not None for a in self.active):
+            self.step()
+        return self.outputs

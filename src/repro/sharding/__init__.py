@@ -1,0 +1,3 @@
+from repro.sharding.policy import (  # noqa: F401
+    ShardingPolicy, make_policy, constrain, current_policy, use_policy, logical_spec,
+)

@@ -1,0 +1,43 @@
+"""Elastic re-meshing: resume a job on a different device mesh.
+
+TPU analog of the paper's horizontal scaling: the flash-checkpoint stores
+mesh-agnostic host arrays; this module rebuilds shardings for the *new* mesh
+(via the logical-axis policy) and device_puts the restored state — i.e. a
+seamless worker/PS count change without re-partitioning logic in user code.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.flash_checkpoint import FlashCheckpoint
+from repro.models.registry import ModelAPI
+from repro.sharding.policy import ShardingPolicy, logical_spec, make_policy
+from repro.train import trainer as trainer_mod
+from repro.train.optim import Optimizer
+
+
+def state_shardings(api: ModelAPI, opt_name: str, policy: ShardingPolicy):
+    """NamedShardings for the full train state under a policy."""
+    specs = trainer_mod.train_state_specs(api, opt_name)
+    return logical_spec(None, specs, policy)
+
+
+def save_for_elasticity(ckpt: FlashCheckpoint, state, step: int) -> None:
+    ckpt.save(state, step)
+
+
+def resume_on_mesh(api: ModelAPI, optimizer: Optimizer, opt_name: str,
+                   ckpt: FlashCheckpoint, mesh, shape: ShapeConfig,
+                   *, step: Optional[int] = None) -> Tuple[Dict[str, Any], int, ShardingPolicy]:
+    """Restore the latest checkpoint onto a (possibly different) mesh."""
+    policy = make_policy(mesh, api.cfg, shape)
+    like = jax.eval_shape(
+        lambda k: trainer_mod.make_train_state(api, optimizer, k),
+        jax.random.PRNGKey(0))
+    shardings = state_shardings(api, opt_name, policy) if mesh is not None else None
+    state, restored_step = ckpt.restore(like, step, shardings=shardings)
+    return state, restored_step, policy

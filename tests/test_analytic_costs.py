@@ -1,0 +1,80 @@
+"""Analytic collective/HBM models: structural invariants (single-device)."""
+import jax
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.launch.costs import analytic_collectives, analytic_hbm_bytes
+from repro.sharding.policy import ShardingPolicy
+
+
+def _policy(rules):
+    """Mesh-free policy stub: axis sizes resolved via a fake mesh dict."""
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+            self.size = 1
+            for v in shape.values():
+                self.size *= v
+    pol = ShardingPolicy(mesh=FakeMesh({"data": 16, "model": 16}), rules=rules)
+    return pol
+
+
+RULES_TRAIN = {"fsdp": ("data",), "tp": ("model",), "batch": ("data",),
+               "kvseq": (), "kv_heads": ("model",)}
+RULES_DECODE_LOCAL = {"fsdp": (), "tp": ("model",), "batch": ("data",),
+                      "kvseq": (), "kv_heads": ("model",)}
+
+
+def test_train_collectives_have_fsdp_and_grad_terms():
+    cfg = ARCHS["llama3.2-3b"]
+    out = analytic_collectives(cfg, SHAPES["train_4k"], _policy(RULES_TRAIN),
+                               param_bytes_total=cfg.param_count() * 2.0)
+    assert out["fsdp_allgather"] > 0
+    assert out["grad_reduce"] > 0
+    assert out["total"] >= out["fsdp_allgather"]
+
+
+def test_decode_without_fsdp_has_no_weight_gather():
+    cfg = ARCHS["chameleon-34b"]
+    out = analytic_collectives(cfg, SHAPES["decode_32k"],
+                               _policy(RULES_DECODE_LOCAL),
+                               param_bytes_total=cfg.param_count() * 2.0)
+    assert out["fsdp_allgather"] == 0.0
+
+
+def test_hbm_decode_dominated_by_weights_and_cache():
+    cfg = ARCHS["llama3.2-3b"]
+    out = analytic_hbm_bytes(cfg, SHAPES["decode_32k"],
+                             _policy(RULES_DECODE_LOCAL),
+                             param_bytes_total=cfg.param_count() * 2.0,
+                             flops_per_device=1e9)
+    assert out["params"] > 0 and out["kv_cache_read"] > 0
+    assert out["total"] == pytest.approx(sum(v for k, v in out.items()
+                                             if k != "total"))
+
+
+def test_local_window_caps_cache_traffic():
+    full = ARCHS["command-r-35b"]          # global attention
+    swa = ARCHS["mixtral-8x22b"]           # 4096-window SWA
+    pol = _policy(RULES_DECODE_LOCAL)
+    a = analytic_hbm_bytes(full, SHAPES["decode_32k"], pol,
+                           full.param_count() * 2.0, 1e9)
+    b = analytic_hbm_bytes(swa, SHAPES["decode_32k"], pol,
+                           swa.param_count() * 2.0, 1e9)
+    # per-layer cache read for SWA is window/seq_len of the full-attn one
+    per_layer_full = a["kv_cache_read"] / full.num_layers
+    per_layer_swa = b["kv_cache_read"] / swa.num_layers
+    assert per_layer_swa < per_layer_full / 4
+
+
+def test_decode_policy_drops_fsdp_for_small_models():
+    from repro.configs.base import SHAPES
+    import jax as _jax
+    if len(_jax.devices()) < 2:
+        # rule resolution itself is pure: build a mesh-free check via policy fn
+        from repro.sharding.policy import make_policy
+        mesh = None
+        pol = make_policy(mesh, ARCHS["llama3.2-3b"], SHAPES["decode_32k"])
+        assert pol.mesh is None           # degenerate on 1 device; covered in
+        # tests/test_policy.py subprocess for the real multi-device meshes

@@ -1,0 +1,74 @@
+"""Auto-scaling stage (Eqns 7–14): candidates, quota, greedy capacity."""
+import numpy as np
+
+from repro.core.autoscaler import (
+    MAX_JOB_CPU, ClusterCapacity, JobState, PlanCandidate, Prices,
+    dlrover_rm_scaler, generate_candidates, get_scaler, list_scalers,
+    register_scaler, resource_cost, weight_wg, weighted_greedy_select,
+)
+from repro.core.perf_model import JobResources, JobStatics, PerfModel, \
+    synthesize_t_iter
+
+STAT = JobStatics(batch_size=512, model_size=3.2e8, bandwidth=1e9, emb_dim=16)
+ALPHA = [3.48e-3, 2.36e-3, 0.68e-3, 2.45e-5]
+
+
+def _fitted_model(seed=0):
+    rng = np.random.default_rng(seed)
+    obs = []
+    for _ in range(48):
+        r = JobResources(w=int(rng.integers(1, 24)), p=int(rng.integers(1, 12)),
+                         cpu_w=float(rng.integers(1, 32)),
+                         cpu_p=float(rng.integers(1, 32)))
+        obs.append((r, STAT, synthesize_t_iter(r, STAT, ALPHA, 2.45e-3,
+                                               noise=0.02, rng=rng)))
+    return PerfModel().fit(obs)
+
+
+def _job(jid="j0", w=2, p=1):
+    return JobState(jid, STAT, JobResources(w=w, p=p, cpu_w=4, cpu_p=4),
+                    _fitted_model(), remaining_samples=5e6)
+
+
+def test_candidates_respect_quota_and_improve_throughput():
+    job = _job()
+    cands = generate_candidates(job, seed=0)
+    assert cands
+    base = job.model.throughput(job.current, STAT)
+    assert any(c.thp > base for c in cands)
+    for c in cands:
+        if c.tg > 0:
+            assert c.resources.total_cpu() <= MAX_JOB_CPU + 1e-6
+
+
+def test_weighted_greedy_respects_capacity():
+    jobs = [_job(f"j{i}") for i in range(3)]
+    cands = {j.job_id: generate_candidates(j, seed=i)
+             for i, j in enumerate(jobs)}
+    cap = ClusterCapacity(total_cpu=100.0, total_mem_gb=1e6)
+    plans = weighted_greedy_select(jobs, cands, cap)
+    used = sum((plans.get(j.job_id) or j.current).total_cpu() for j in jobs)
+    assert used <= cap.total_cpu + 1e-6
+
+
+def test_wg_prioritizes_short_jobs():
+    j_short = _job("s")
+    j_short.remaining_samples = 1e5
+    j_long = _job("l")
+    j_long.remaining_samples = 1e8
+    assert weight_wg(j_short, 1000.0) > weight_wg(j_long, 1000.0)
+
+
+def test_resource_cost_linear():
+    p = Prices(cpu=1.0, mem_gb=0.0)
+    r = JobResources(w=2, p=1, cpu_w=4, cpu_p=4)
+    assert resource_cost(r, p) == r.total_cpu()
+
+
+def test_plugin_api():
+    @register_scaler("noop_test")
+    def noop(jobs, capacity):
+        return {}
+    assert "noop_test" in list_scalers()
+    assert get_scaler("noop_test")([], ClusterCapacity(1, 1)) == {}
+    assert "dlrover_rm" in list_scalers()

@@ -1,0 +1,49 @@
+"""NSGA-II properties: Pareto-front validity, dominance, convergence."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nsga2 import fast_non_dominated_sort, Individual, nsga2
+
+
+def _dominates(a, b):
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+def test_front_is_mutually_nondominated():
+    front = nsga2(lambda x: (x[0] ** 2, (x[0] - 2) ** 2), [(-5, 5)],
+                  pop_size=30, generations=25, integer=False, seed=0)
+    for i, (_, fi) in enumerate(front):
+        for j, (_, fj) in enumerate(front):
+            if i != j:
+                assert not _dominates(fi, fj)
+
+
+def test_converges_to_known_pareto_set():
+    """min (x², (x-2)²): Pareto set is x ∈ [0, 2]."""
+    front = nsga2(lambda x: (x[0] ** 2, (x[0] - 2) ** 2), [(-5, 5)],
+                  pop_size=40, generations=40, integer=False, seed=1)
+    xs = np.array([x[0] for x, _ in front])
+    assert np.all(xs >= -0.25) and np.all(xs <= 2.25)
+    assert xs.min() < 0.6 and xs.max() > 1.4      # spread along the front
+
+
+def test_integer_mode_rounds():
+    front = nsga2(lambda x: (x[0], -x[0]), [(0, 10)], pop_size=16,
+                  generations=5, integer=True, seed=2)
+    for x, _ in front:
+        assert float(x[0]).is_integer()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(4, 24))
+def test_nondominated_sort_rank0_correct(seed, n):
+    rng = np.random.default_rng(seed)
+    pop = [Individual(x=np.zeros(1), f=rng.random(2)) for _ in range(n)]
+    fronts = fast_non_dominated_sort(pop)
+    rank0 = fronts[0]
+    for p in rank0:
+        assert not any(_dominates(q.f, p.f) for q in pop)
+    for front_i in fronts[1:]:
+        for p in front_i:
+            assert any(_dominates(q.f, p.f) for q in pop)
+    assert sum(len(f) for f in fronts) == n

@@ -1,0 +1,64 @@
+"""Resource-performance model (Eqns 1–6): NNLS fit recovery + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import (
+    JobResources, JobStatics, PerfModel, feature_vector, synthesize_t_iter,
+)
+
+STAT = JobStatics(batch_size=512, model_size=3.2e8, bandwidth=1e9, emb_dim=16)
+ALPHA = [3.48e-3, 2.36e-3, 0.68e-3, 2.45e-5]
+BETA = 2.45e-3
+
+
+def _obs(n, seed, noise=0.0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        r = JobResources(w=int(rng.integers(1, 24)), p=int(rng.integers(1, 12)),
+                         cpu_w=float(rng.integers(1, 32)),
+                         cpu_p=float(rng.integers(1, 32)))
+        out.append((r, STAT, synthesize_t_iter(r, STAT, ALPHA, BETA,
+                                               noise=noise, rng=rng)))
+    return out
+
+
+def test_nnls_exact_recovery_noiseless():
+    model = PerfModel().fit(_obs(64, 0))
+    np.testing.assert_allclose(model.alpha, ALPHA, rtol=0.05)
+    np.testing.assert_allclose(model.beta_sum, BETA, rtol=0.1)
+    assert model.rmsle(_obs(32, 1)) < 1e-3
+
+
+def test_fit_with_noise_generalizes():
+    model = PerfModel().fit(_obs(96, 0, noise=0.05))
+    test = _obs(48, 1, noise=0.0)
+    rel_errs = [abs(model.t_iter(r, s) - t) / t for r, s, t in test]
+    assert np.median(rel_errs) < 0.15
+
+
+def test_nonnegative_coefficients():
+    model = PerfModel().fit(_obs(64, 2, noise=0.3))
+    assert np.all(model.alpha >= 0) and model.beta_sum >= 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(w=st.integers(1, 32), p=st.integers(1, 16),
+       cw=st.integers(1, 32), cp=st.integers(1, 32))
+def test_throughput_monotonic_in_worker_cpu(w, p, cw, cp):
+    """More worker CPU never hurts T_grad => throughput non-decreasing."""
+    model = PerfModel(alpha=np.array(ALPHA), beta_sum=BETA, fitted=True)
+    r1 = JobResources(w=w, p=p, cpu_w=cw, cpu_p=cp)
+    r2 = JobResources(w=w, p=p, cpu_w=cw * 2, cpu_p=cp)
+    assert model.throughput(r2, STAT) >= model.throughput(r1, STAT) - 1e-9
+
+
+def test_feature_vector_matches_paper_structure():
+    r = JobResources(w=4, p=2, cpu_w=8, cpu_p=8)
+    x = feature_vector(r, STAT)
+    assert x[0] == pytest.approx(512 / 8)               # m / λw
+    assert x[1] == pytest.approx(4 / 16)                # w / (p·λp)
+    assert x[2] == pytest.approx((3.2e8 / 2) / (1e9 / 4))
+    assert x[3] == pytest.approx(512 * 16 / 2)          # m·D / p
+    assert x[4] == 1.0

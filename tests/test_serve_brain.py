@@ -1,0 +1,79 @@
+"""Serving engine + cluster-brain orchestration integration."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import reduce_config
+from repro.configs.registry import ARCHS
+from repro.core.autoscaler import ClusterCapacity
+from repro.core.brain import ClusterBrain, JobMaster, Profiler
+from repro.core.perf_model import JobResources, JobStatics
+from repro.core.sharding_service import ShardingService
+from repro.core.warm_start import JobMeta
+from repro.models.registry import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def test_serve_engine_batched_completions():
+    cfg = reduce_config(ARCHS["llama3.2-3b"])
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, slots=2, max_len=48)
+    for r in range(5):
+        eng.submit(Request(rid=r, prompt=np.arange(4) + r, max_new_tokens=3))
+    outs = eng.run()
+    assert len(outs) == 5
+    for c in outs.values():
+        assert len(c.tokens) == 3
+
+
+def test_serve_greedy_deterministic():
+    cfg = reduce_config(ARCHS["llama3.2-3b"])
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(api, params, slots=1, max_len=32)
+        eng.submit(Request(rid=0, prompt=np.arange(6), max_new_tokens=4))
+        outs.append(eng.run()[0].tokens)
+    assert outs[0] == outs[1]
+
+
+def _master(jid="j0"):
+    stat = JobStatics(batch_size=512, model_size=3.2e8, bandwidth=1e9, emb_dim=16)
+    meta = JobMeta("dcn", 1e6, 1e7, 16, 512, 1e7)
+    return JobMaster(
+        job_id=jid, meta=meta, statics=stat,
+        resources=JobResources(w=2, p=1, cpu_w=4, cpu_p=4),
+        total_samples=1e6,
+        sharding=ShardingService(1000, 100),
+        profiler=Profiler(statics=stat))
+
+
+def test_brain_three_stage_lifecycle():
+    brain = ClusterBrain(ClusterCapacity(2048, 16384))
+    m = _master()
+    plan = brain.admit(m)                         # stage 1 (cold DB: default)
+    assert plan.w >= 1
+    # profile some iterations so stage 2 can fit the model
+    from repro.core.perf_model import synthesize_t_iter
+    rng = np.random.default_rng(0)
+    import dataclasses
+    for i in range(12):
+        r = dataclasses.replace(m.resources, w=1 + i % 6, p=1 + i % 3)
+        t = synthesize_t_iter(r, m.statics, [3.48e-3, 2.36e-3, 0.68e-3, 2.45e-5],
+                              2.45e-3, noise=0.02, rng=rng)
+        m.profiler.record_iteration(r, t)
+    plans = brain.optimize()                      # stage 2
+    assert isinstance(plans, dict)
+    # stage 3: memory growth triggers predictive scale-up
+    for i in range(8):
+        m.profiler.record_memory(i * 1e5, 4e9 + i * 2e9)
+    scaled = brain.check_oom()
+    assert m.resources.mem_p >= 16.0
+    brain.complete("j0", throughput=1000.0)
+    assert len(brain.config_db) == 1
+    # a similar new job now warm-starts from history
+    m2 = _master("j1")
+    plan2 = brain.admit(m2)
+    assert plan2 is not None

@@ -1,0 +1,103 @@
+"""Property: dynamic data sharding is exactly-once under ANY event sequence
+(failures, stragglers, elastic worker churn). Hypothesis drives the chaos.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sharding_service import ShardingService
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    total=st.integers(16, 600),
+    shard_size=st.integers(4, 128),
+    n_workers=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+    fail_prob=st.floats(0.0, 0.4),
+    straggle_prob=st.floats(0.0, 0.4),
+)
+def test_exactly_once_under_chaos(total, shard_size, n_workers, seed,
+                                  fail_prob, straggle_prob):
+    rng = np.random.default_rng(seed)
+    svc = ShardingService(total, shard_size, min_shard=2,
+                          heartbeat_timeout=1e9)
+    clock = [0.0]
+
+    def now():
+        clock[0] += 1.0
+        return clock[0]
+
+    alive = {f"w{i}" for i in range(n_workers)}
+    spawned = n_workers
+    guard = 0
+    while guard < 100_000:
+        guard += 1
+        if not alive:
+            alive.add(f"w{spawned}")
+            spawned += 1
+        w = rng.choice(sorted(alive))
+        r = rng.random()
+        if r < fail_prob:
+            svc.report_failure(w, now())
+            alive.discard(w)
+            if rng.random() < 0.8:          # elastic replacement
+                alive.add(f"w{spawned}")
+                spawned += 1
+            continue
+        if r < fail_prob + straggle_prob:
+            svc._view(w, now()).is_straggler = True
+        shard = svc.request_shard(w, now())
+        if shard is None:
+            if all(svc._view(x, now()).shard is None for x in alive):
+                break
+            continue
+        # consume with heartbeats, then either finish or loop (may fail later)
+        svc.heartbeat(w, shard.size // 2, now())
+        if rng.random() < 0.9:
+            svc.report_done(w, shard.index, now())
+    ok, covered, dup = svc.coverage(0)
+    # drain any shards still held by living workers
+    for w in list(alive):
+        v = svc._view(w, now())
+        if v.shard is not None:
+            svc.report_done(w, v.shard.index, now())
+    while True:
+        s = svc.request_shard("drainer", now())
+        if s is None:
+            break
+        svc.report_done("drainer", s.index, now())
+    ok, covered, dup = svc.coverage(0)
+    assert ok, (covered, dup, total)
+    assert covered == total
+    assert dup == 0
+
+
+def test_straggler_receives_smaller_shards():
+    svc = ShardingService(1000, shard_size=100, min_shard=10)
+    svc._view("slow", 0.0).is_straggler = True
+    s_fast = svc.request_shard("fast", 1.0)
+    s_slow = svc.request_shard("slow", 1.0)
+    assert s_slow.size < s_fast.size
+
+
+def test_heartbeat_timeout_reaps_and_requeues():
+    svc = ShardingService(100, shard_size=50, heartbeat_timeout=5.0)
+    s = svc.request_shard("w0", 0.0)
+    assert s is not None
+    dead = svc.check_failures(100.0)
+    assert "w0" in dead
+    s2 = svc.request_shard("w1", 101.0)
+    assert (s2.start, s2.end) == (s.start, s.end)
+
+
+def test_multi_epoch_refill():
+    svc = ShardingService(64, shard_size=32, num_epochs=2)
+    seen = []
+    while True:
+        s = svc.request_shard("w", 0.0)
+        if s is None:
+            break
+        seen.append(s)
+        svc.report_done("w", s.index, 0.0)
+    assert len(seen) == 4                     # 2 shards × 2 epochs
+    assert {s.epoch for s in seen} == {0, 1}

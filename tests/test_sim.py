@@ -1,0 +1,63 @@
+"""Cluster-simulator sanity: scheduler ordering, event handling, accounting."""
+import numpy as np
+import pytest
+
+from repro.sim.cluster import CloudSim
+from repro.sim.workload import generate_jobs, oracle_config, true_throughput
+
+
+@pytest.fixture(scope="module")
+def jobs():
+    return generate_jobs(10, seed=2, arrival_rate_per_h=60, mean_msamples=20.0)
+
+
+def test_oracle_beats_user_throughput(jobs):
+    for j in jobs:
+        assert true_throughput(j, j.oracle) >= true_throughput(j, j.user_request)
+
+
+def test_all_jobs_complete_without_failures(jobs):
+    sim = CloudSim("static_tuned", total_cpu=8192, total_mem_gb=65536,
+                   seed=1, enable_failures=False)
+    res = sim.run(jobs, horizon_s=24 * 3600)
+    assert res.jcr() == 1.0
+
+
+def test_dlrover_beats_optimus_jct(jobs):
+    out = {}
+    for name in ("dlrover_rm", "optimus"):
+        sim = CloudSim(name, total_cpu=8192, total_mem_gb=65536, seed=1,
+                       enable_failures=False)
+        res = sim.run(jobs, horizon_s=24 * 3600)
+        out[name] = res.jct_percentile(50)
+    assert out["dlrover_rm"] < out["optimus"]
+
+
+def test_failures_tracked_and_recovered():
+    jobs = generate_jobs(6, seed=4, mean_msamples=20.0)
+    sim = CloudSim("dlrover_rm", total_cpu=8192, total_mem_gb=65536, seed=2,
+                   pod_failure_rate_per_day=5.0)   # absurdly failure-prone
+    res = sim.run(jobs, horizon_s=24 * 3600)
+    assert sum(r.failures for r in res.records) > 0
+    assert res.jcr() > 0.5                          # survives via sharding
+
+
+def test_oom_prevention_reduces_oom_events():
+    jobs = generate_jobs(12, seed=6, mean_msamples=30.0)
+    ooms = {}
+    for name in ("static_user", "dlrover_rm"):
+        sim = CloudSim(name, total_cpu=8192, total_mem_gb=65536, seed=3,
+                       enable_failures=True, pod_failure_rate_per_day=0.0,
+                       straggler_rate_per_pod_per_day=0.0,
+                       hotps_rate_per_pod_per_day=0.0)
+        res = sim.run(jobs, horizon_s=24 * 3600)
+        ooms[name] = sum(r.ooms for r in res.records)
+    assert ooms["dlrover_rm"] <= ooms["static_user"]
+
+
+def test_utilization_timeseries_populated(jobs):
+    sim = CloudSim("static_user", total_cpu=8192, total_mem_gb=65536, seed=1)
+    res = sim.run(jobs, horizon_s=8 * 3600)
+    assert len(res.ts_time) > 10
+    assert all(u <= a + 1e-6 for u, a in zip(res.ts_used_cpu, res.ts_alloc_cpu)
+               if a > 0)

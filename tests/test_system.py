@@ -1,0 +1,93 @@
+"""End-to-end behaviour: DLRM training with elastic data sharding, checkpoint
+resume, and convergence — the paper's system running for real (reduced scale).
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dlrm_models import WIDE_DEEP, reduced_dlrm
+from repro.core.flash_checkpoint import FlashCheckpoint
+from repro.core.sharding_service import ShardingService
+from repro.data.pipeline import ShardDataLoader
+from repro.data.synthetic import criteo_batch
+from repro.models.dlrm import init_dlrm
+from repro.train import optim, trainer
+
+
+def _mk(cfg, seed=0):
+    opt = optim.adagrad(0.05)
+    params = init_dlrm(cfg, jax.random.PRNGKey(seed))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    step = jax.jit(trainer.make_dlrm_train_step(cfg, opt))
+    return state, step
+
+
+def test_dlrm_trains_and_improves():
+    cfg = reduced_dlrm(WIDE_DEEP)
+    state, step = _mk(cfg)
+    svc = ShardingService(total_samples=1024, shard_size=128)
+    loader = ShardDataLoader(svc, "w0",
+                             lambda idx: criteo_batch(cfg, 7, idx), 32,
+                             clock=lambda: 0.0)
+    losses = []
+    for batch in loader:
+        state, m = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+        losses.append(float(m["loss"]))
+    assert len(losses) == 1024 // 32
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    ok, covered, dup = svc.coverage(0)
+    assert ok and covered == 1024 and dup == 0
+
+
+def test_worker_failure_recovery_preserves_data():
+    """A worker dies mid-shard; replacement resumes; exactly-once holds."""
+    cfg = reduced_dlrm(WIDE_DEEP)
+    state, step = _mk(cfg)
+    svc = ShardingService(total_samples=512, shard_size=128,
+                          heartbeat_timeout=10.0)
+    clock = [0.0]
+
+    def tick():
+        clock[0] += 1.0
+        return clock[0]
+
+    la = ShardDataLoader(svc, "wA", lambda i: criteo_batch(cfg, 7, i), 32,
+                         clock=tick)
+    for _ in range(2):                       # partial shard consumption
+        b = la.next_batch()
+        state, _ = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+    svc.report_failure("wA", tick())
+    lb = ShardDataLoader(svc, "wB", lambda i: criteo_batch(cfg, 7, i), 32,
+                         clock=tick)
+    n = 0
+    for b in lb:
+        state, _ = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        n += 1
+    ok, covered, dup = svc.coverage(0)
+    assert ok and covered == 512 and dup == 0
+
+
+def test_checkpoint_resume_training():
+    cfg = reduced_dlrm(WIDE_DEEP)
+    state, step = _mk(cfg)
+    batch = {k: jnp.asarray(v)
+             for k, v in criteo_batch(cfg, 7, np.arange(32)).items()}
+    for _ in range(3):
+        state, _ = step(state, batch)
+    with tempfile.TemporaryDirectory() as d:
+        ck = FlashCheckpoint(d, async_persist=False)
+        ck.save(state, 3)
+        # fresh process simulation: new ckpt instance reads from disk
+        ck2 = FlashCheckpoint(d)
+        like = jax.eval_shape(lambda: state)
+        restored, rstep = ck2.restore(like)
+        assert rstep == 3
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(a, b)
+        state2, m2 = step(restored, batch)
+        state1, m1 = step(state, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-6)

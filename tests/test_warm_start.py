@@ -1,0 +1,50 @@
+"""Warm-starting (Algorithm 1) behaviour."""
+import dataclasses
+
+from repro.core.perf_model import JobResources
+from repro.core.warm_start import (
+    ConfigDB, ConfigRecord, JobMeta, similarity, warm_start,
+    warm_start_accuracy,
+)
+
+
+def _meta(kind="dcn", size=1e6, user="u0"):
+    return JobMeta(kind, dense_params=size, emb_rows=1e7, emb_dim=16,
+                   batch_size=512, dataset_samples=1e7, user=user)
+
+
+def test_similarity_identity_is_max():
+    m = _meta()
+    assert similarity(m, m) >= similarity(m, _meta(size=1e9, user="zz"))
+
+
+def test_most_similar_job_dominates_smoothing():
+    db = ConfigDB()
+    db.add(ConfigRecord(_meta(size=1e12, user="x"),
+                        JobResources(w=1, p=1, cpu_w=1, cpu_p=1)))
+    db.add(ConfigRecord(_meta(size=1e6, user="u0"),
+                        JobResources(w=16, p=8, cpu_w=16, cpu_p=16)))
+    out = warm_start(_meta(size=1e6, user="u0"), db, k=2, mu=0.8)
+    # Ā = 0.8·(most similar) + 0.2·(least similar)
+    assert out.w >= 12 and out.p >= 6
+
+
+def test_cold_start_fallback():
+    default = JobResources(w=3, p=2, cpu_w=5, cpu_p=5)
+    assert warm_start(_meta(), ConfigDB(), default=default) == default
+
+
+def test_homogeneous_history_returns_same_config():
+    db = ConfigDB()
+    cfgr = JobResources(w=8, p=4, cpu_w=8, cpu_p=8)
+    for i in range(10):
+        db.add(ConfigRecord(_meta(), cfgr))
+    out = warm_start(_meta(), db, k=5, mu=0.5)
+    assert (out.w, out.p, out.cpu_w, out.cpu_p) == (8, 4, 8.0, 8.0)
+
+
+def test_accuracy_metric():
+    a = JobResources(w=8, p=4, cpu_w=8, cpu_p=8)
+    assert warm_start_accuracy(a, a) == 1.0
+    b = dataclasses.replace(a, w=4)
+    assert 0.5 < warm_start_accuracy(b, a) < 1.0
