@@ -39,6 +39,12 @@ class DLRMConfig:
     def total_embedding_rows(self) -> int:
         return sum(self.table_rows)
 
+    @property
+    def table_offsets(self) -> Tuple[int, ...]:
+        """Exclusive per-table row offsets into the pooled (R, D) table."""
+        from repro.kernels.fused_embedding import table_offsets
+        return table_offsets(self.table_rows)
+
     def param_count(self) -> int:
         emb = self.total_embedding_rows * self.embed_dim
         d_in = self.n_dense + self.n_tables * self.embed_dim

@@ -100,7 +100,14 @@ class PerfModel:
         # relative-error weighting ≈ RMSLE for small errors
         Xw = X / t[:, None]
         yw = np.ones_like(t)
-        coef, _ = nnls(Xw, yw)
+        try:
+            coef, _ = nnls(Xw, yw)
+        except (np.linalg.LinAlgError, RuntimeError):
+            # newer scipy raises LinAlgError on singular systems (e.g. all
+            # observations at the same resource point); fall back to a
+            # minimum-norm least-squares fit clipped to the NNLS domain
+            coef, *_ = np.linalg.lstsq(Xw, yw, rcond=None)
+            coef = np.clip(coef, 0.0, None)
         self.alpha = coef[:4]
         self.beta_sum = float(coef[4])
         self.fitted = True

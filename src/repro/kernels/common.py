@@ -1,0 +1,18 @@
+"""Constants shared by the Pallas kernels and their pure-jnp oracles.
+
+Two different "very negative" numbers exist for two different jobs, and the
+distinction matters:
+
+* ``NEG_INF`` — identity element for max-pooling accumulators. Must be the
+  most negative finite float32 so that ``max(NEG_INF, x) == x`` for *every*
+  finite ``x`` (a table row can legitimately hold -1e31; an init of -1e30
+  would silently win the max). Used by the embedding-bag kernels and oracles.
+* ``MASK_VALUE`` — additive mask for pre-softmax attention scores. Chosen
+  large enough that ``exp(MASK_VALUE - m)`` underflows to 0 but small enough
+  that masked-score arithmetic (subtracting running maxima, multiplying by
+  scale factors) cannot overflow to -inf and poison the softmax with NaNs.
+"""
+from __future__ import annotations
+
+NEG_INF = -3.0e38       # max-combiner identity (≈ most negative finite f32)
+MASK_VALUE = -1e30      # attention score mask (softmax-safe)

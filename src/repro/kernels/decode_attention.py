@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.common import MASK_VALUE as NEG_INF
 
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, cpos_ref, o_ref,

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused embedding gather + segment pooling (embedding bag).
+"""Pallas TPU kernel: single-table embedding gather + segment pooling.
 
 The paper's #1 hot spot: embedding-table lookups consume 30–48 % of DLRM
 iteration time (§1, Fig 1a). On the CPU/PS architecture this is network+DRAM
@@ -8,7 +8,14 @@ exactly one embedding row HBM→VMEM via the BlockSpec index_map — no
 materialized (B, n, D) gather tensor ever exists. Pooling (sum/mean/max)
 accumulates in the revisited output block.
 
-Weighted bags multiply each row by a per-(b, lookup) scalar prefetched to SMEM.
+Weighted bags multiply each row by a per-(b, lookup) scalar prefetched to
+SMEM *before* the combiner is applied, so weighted mean/max agree with
+``ref.embedding_bag_ref`` (weights used to be silently ignored for any
+combiner but "sum").
+
+This is the legacy one-table-per-call kernel; the multi-table hot path lives
+in ``repro.kernels.fused_embedding`` (one launch for all tables + sparse
+VJP). ``ops.embedding_bag`` routes through the fused engine.
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -3.0e38
+from repro.kernels.common import NEG_INF
 
 
 def _bag_kernel(idx_ref, table_row_ref, out_ref, *, n: int, combiner: str):
@@ -45,16 +52,28 @@ def _bag_kernel(idx_ref, table_row_ref, out_ref, *, n: int, combiner: str):
             out_ref[...] = out_ref[...] / n
 
 
-def _bag_kernel_weighted(idx_ref, w_ref, table_row_ref, out_ref, *, n: int):
+def _bag_kernel_weighted(idx_ref, w_ref, table_row_ref, out_ref, *, n: int,
+                         combiner: str):
     b = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        if combiner == "max":
+            out_ref[...] = jnp.full_like(out_ref, NEG_INF)
+        else:
+            out_ref[...] = jnp.zeros_like(out_ref)
 
-    w = w_ref[b, j]
-    out_ref[...] += (table_row_ref[...].astype(jnp.float32) * w).astype(out_ref.dtype)
+    row = table_row_ref[...].astype(jnp.float32) * w_ref[b, j]
+    if combiner == "max":
+        out_ref[...] = jnp.maximum(out_ref[...], row.astype(out_ref.dtype))
+    else:
+        out_ref[...] += row.astype(out_ref.dtype)
+
+    if combiner == "mean":
+        @pl.when(j == n - 1)
+        def _fin():
+            out_ref[...] = out_ref[...] / n
 
 
 def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
@@ -67,7 +86,7 @@ def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
     indices = indices.astype(jnp.int32)
 
     if weights is not None:
-        kernel = functools.partial(_bag_kernel_weighted, n=n)
+        kernel = functools.partial(_bag_kernel_weighted, n=n, combiner=combiner)
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,   # indices, weights
             grid=(B, n),

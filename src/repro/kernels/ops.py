@@ -56,12 +56,31 @@ def decode_attention(q, k_cache, v_cache, cache_pos, pos, *, window=None,
         q, k_cache, v_cache, cache_pos, pos, window=window, softcap=softcap)
 
 
-def embedding_bag(table, indices, weights=None, *, combiner="sum", impl=None):
-    """Fused embedding gather + pooling. table (R, D); indices (B, n); -> (B, D)."""
+def fused_embedding_bag(pool, indices, weights=None, *, offsets=None,
+                        combiner="sum", impl=None, block_b=8):
+    """Multi-table fused embedding engine (one call for all tables).
+
+    pool (R, D) row-concatenated tables; indices (B, T, H) per-table-local
+    rows (``offsets`` = static per-table row offsets, None if already
+    global); weights (B, T, H)? -> (B, T, D). All impls share a custom VJP
+    whose backward scatter-adds sparse table gradients via ``segment_sum``.
+    """
     impl = impl or _DEFAULT_IMPL
-    if impl in ("pallas", "interpret"):
-        from repro.kernels import embedding_bag as eb
-        return eb.embedding_bag(table, indices, weights, combiner=combiner,
-                                interpret=(impl == "interpret"))
-    from repro.kernels import ref
-    return ref.embedding_bag_ref(table, indices, weights, combiner=combiner)
+    from repro.kernels import fused_embedding as fe
+    return fe.fused_embedding_bag(
+        pool, indices, weights, offsets=offsets, combiner=combiner,
+        method=impl, block_b=block_b)
+
+
+def embedding_bag(table, indices, weights=None, *, combiner="sum", impl=None):
+    """Fused embedding gather + pooling. table (R, D); indices (B, n); -> (B, D).
+
+    Single-table convenience wrapper over ``fused_embedding_bag`` (T=1), so
+    every caller gets the same combiner semantics (weights apply before
+    sum/mean/max) and the sparse-gradient VJP.
+    """
+    out = fused_embedding_bag(
+        table, indices[:, None, :],
+        None if weights is None else weights[:, None, :],
+        combiner=combiner, impl=impl)
+    return out[:, 0]

@@ -1,12 +1,12 @@
 """Pure-jnp oracles for every Pallas kernel (ground truth in tests)."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.kernels.common import MASK_VALUE, NEG_INF  # noqa: F401  (shared)
 
 
 def embedding_bag_ref(table, indices, weights=None, *, combiner="sum"):
@@ -20,6 +20,33 @@ def embedding_bag_ref(table, indices, weights=None, *, combiner="sum"):
         return jnp.mean(gathered, axis=1)
     if combiner == "max":
         return jnp.max(gathered, axis=1)
+    raise ValueError(combiner)
+
+
+def fused_embedding_bag_ref(pool, indices, weights=None, *,
+                            offsets: Optional[Sequence[int]] = None,
+                            combiner="sum"):
+    """Multi-table oracle over the pooled layout: one take, one reduction.
+
+    pool (R, D) row-concatenated tables; indices (B, T, H) per-table-local
+    rows (global if ``offsets`` is None); weights (B, T, H)? -> (B, T, D).
+    Differentiable via plain autodiff — the ground truth for the fused
+    engine's custom VJP.
+    """
+    B, T, H = indices.shape
+    idx = indices.astype(jnp.int32)
+    if offsets is not None:
+        idx = idx + jnp.asarray(offsets, jnp.int32)[None, :, None]
+    gathered = jnp.take(pool, idx.reshape(-1), axis=0).reshape(
+        B, T, H, pool.shape[1])
+    if weights is not None:
+        gathered = gathered * weights[..., None]
+    if combiner == "sum":
+        return jnp.sum(gathered, axis=2)
+    if combiner == "mean":
+        return jnp.mean(gathered, axis=2)
+    if combiner == "max":
+        return jnp.max(gathered, axis=2)
     raise ValueError(combiner)
 
 
@@ -41,7 +68,7 @@ def attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
         mask &= dpos >= 0
     if window is not None:
         mask &= dpos < window
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    s = jnp.where(mask[None, None, None], s, MASK_VALUE)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return o.reshape(B, Sq, Hq, D).astype(q.dtype)
@@ -60,7 +87,7 @@ def decode_attention_ref(q, k_cache, v_cache, cache_pos, pos, *,
     valid = (cache_pos >= 0) & (cache_pos <= pos[:, None])
     if window is not None:
         valid &= cache_pos > (pos[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, MASK_VALUE)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, Hq, D).astype(q.dtype)

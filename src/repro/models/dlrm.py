@@ -1,9 +1,15 @@
 """The paper's DLRM workloads: Wide&Deep (Model-X), xDeepFM (Model-Y), DCN (Model-Z).
 
-Sparse categorical features -> per-feature embedding tables -> pooled lookups
-(the paper's 30–48 % hot spot, served by the Pallas ``embedding_bag`` kernel)
--> dense interaction network -> CTR logit. Tables are row-sharded over the
-"model" (parameter-server) axis, exactly as §2.1 describes.
+Sparse categorical features -> embedding tables -> pooled lookups (the
+paper's 30–48 % hot spot) -> dense interaction network -> CTR logit.
+
+All ``n_tables`` embedding tables live in ONE pooled ``(sum(rows), D)``
+array addressed through static per-table row offsets (``cfg.table_offsets``),
+and the whole forward issues exactly one ``ops.fused_embedding_bag`` call for
+the deep part (plus one for the wide part in wide_deep) instead of a Python
+loop of per-table kernels. The pooled rows are sharded over the "model"
+(parameter-server) axis, exactly as §2.1 describes — one spec covers every
+table.
 """
 from __future__ import annotations
 
@@ -21,9 +27,10 @@ from repro.sharding.policy import constrain
 def init_dlrm(cfg: DLRMConfig, key) -> Dict[str, Any]:
     kg = KeyGen(key)
     D = cfg.embed_dim
+    # one pooled row array for all tables (rows laid out at cfg.table_offsets)
     params: Dict[str, Any] = {
-        "tables": {f"t{i}": dense_init(kg(), (rows, D), D, jnp.float32)
-                   for i, rows in enumerate(cfg.table_rows)},
+        "tables": dense_init(kg(), (cfg.total_embedding_rows, D), D,
+                             jnp.float32),
     }
     d_in = cfg.n_dense + cfg.n_tables * D
     mlp = {}
@@ -37,8 +44,7 @@ def init_dlrm(cfg: DLRMConfig, key) -> Dict[str, Any]:
     params["mlp"] = mlp
 
     if cfg.kind == "wide_deep":
-        params["wide"] = {f"t{i}": jnp.zeros((rows, 1), jnp.float32)
-                          for i, rows in enumerate(cfg.table_rows)}
+        params["wide"] = jnp.zeros((cfg.total_embedding_rows, 1), jnp.float32)
         params["wide_dense"] = jnp.zeros((cfg.n_dense,), jnp.float32)
     if cfg.kind == "dcn":
         params["cross"] = {
@@ -63,7 +69,7 @@ def init_dlrm(cfg: DLRMConfig, key) -> Dict[str, Any]:
 
 def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
     specs: Dict[str, Any] = {
-        "tables": {f"t{i}": ("vocab", None) for i in range(cfg.n_tables)},
+        "tables": ("vocab", None),      # pooled rows over the PS/model axis
         "mlp": {},
     }
     prev = cfg.n_dense + cfg.n_tables * cfg.embed_dim
@@ -73,7 +79,7 @@ def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
     specs["mlp"]["w_out"] = (None, None)
     specs["mlp"]["b_out"] = (None,)
     if cfg.kind == "wide_deep":
-        specs["wide"] = {f"t{i}": ("vocab", None) for i in range(cfg.n_tables)}
+        specs["wide"] = ("vocab", None)
         specs["wide_dense"] = (None,)
     if cfg.kind == "dcn":
         specs["cross"] = {f"w{li}": (None,) for li in range(cfg.cross_layers)}
@@ -85,14 +91,10 @@ def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
 
 
 def _field_embeddings(params, batch, cfg: DLRMConfig):
-    """Pooled per-field embeddings via embedding_bag. -> (B, n_tables, D)."""
-    outs = []
-    for i in range(cfg.n_tables):
-        idx = batch["sparse"][:, i, :]                      # (B, multi_hot)
-        pooled = ops.embedding_bag(params["tables"][f"t{i}"], idx,
-                                   combiner=cfg.pooling)
-        outs.append(pooled)
-    return jnp.stack(outs, axis=1)                          # (B, m, D)
+    """All per-field embeddings in ONE fused call. -> (B, n_tables, D)."""
+    return ops.fused_embedding_bag(
+        params["tables"], batch["sparse"], offsets=cfg.table_offsets,
+        combiner=cfg.pooling)
 
 
 def _deep_mlp(params, x, cfg: DLRMConfig):
@@ -111,11 +113,11 @@ def dlrm_forward(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
 
     if cfg.kind == "wide_deep":
         deep = _deep_mlp(params, x0, cfg)
-        wide = batch["dense"] @ params["wide_dense"]
-        for i in range(cfg.n_tables):
-            idx = batch["sparse"][:, i, :]
-            wide = wide + ops.embedding_bag(
-                params["wide"][f"t{i}"], idx, combiner="sum")[:, 0]
+        wide_emb = ops.fused_embedding_bag(
+            params["wide"], batch["sparse"], offsets=cfg.table_offsets,
+            combiner="sum")                                  # (B, m, 1)
+        wide = batch["dense"] @ params["wide_dense"] + jnp.sum(
+            wide_emb[..., 0], axis=1)
         return deep + wide
 
     if cfg.kind == "dcn":

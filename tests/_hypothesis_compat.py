@@ -1,0 +1,89 @@
+"""Hypothesis compatibility shim for the test suite.
+
+When ``hypothesis`` is installed (the ``test`` extra in pyproject.toml), this
+module re-exports the real ``given``/``settings``/``strategies``. When it is
+absent, a minimal deterministic stand-in runs each property test over a fixed
+set of pseudo-random examples instead of erroring at import time — the suite
+degrades to example-based testing rather than losing 6 modules to collection
+errors.
+
+Only the strategy surface this repo uses is shimmed: ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``lists``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis missing
+    HAVE_HYPOTHESIS = False
+
+    _MAX_SHIM_EXAMPLES = 16
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    st = _St()
+
+    def given(**strategy_kwargs):
+        def decorator(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                conf = getattr(wrapper, "_shim_settings", {})
+                n = min(int(conf.get("max_examples", 10)), _MAX_SHIM_EXAMPLES)
+                # deterministic per-test seed: same examples on every run
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(max(n, 1)):
+                    example = {k: s.draw(rng)
+                               for k, s in strategy_kwargs.items()}
+                    fn(*args, **kwargs, **example)
+
+            # hide the strategy params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs])
+            del wrapper.__wrapped__
+            return wrapper
+        return decorator
+
+    def settings(**config):
+        def decorator(fn):
+            fn._shim_settings = config
+            return fn
+        return decorator

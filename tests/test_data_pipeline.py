@@ -2,7 +2,7 @@
 reproduces identical samples for the same indices; loaders cover datasets.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.dlrm_models import WIDE_DEEP, reduced_dlrm
 from repro.core.sharding_service import ShardingService

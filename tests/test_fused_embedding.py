@@ -1,0 +1,229 @@
+"""Fused multi-table embedding engine: correctness, gradients, dispatch.
+
+Covers the acceptance contract of the fused engine:
+  * Pallas (interpret) and XLA forward match the pooled oracle to <= 1e-5 for
+    every combiner, weighted and unweighted.
+  * jax.grad through the custom-VJP fused path matches jax.grad through the
+    plain-autodiff ref path (sparse table grads + lookup-weight grads).
+  * dlrm_forward issues exactly ONE fused call for the deep part (plus one
+    for the wide part in wide_deep), independent of n_tables.
+  * legacy single-table embedding_bag honours combiner when weights are given.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.dlrm_models import DCN, WIDE_DEEP, XDEEPFM, reduced_dlrm
+from repro.data.synthetic import criteo_batch
+from repro.kernels import common, ops, ref
+from repro.kernels import embedding_bag as legacy_eb
+from repro.kernels.fused_embedding import fused_embedding_bag, table_offsets
+from repro.models import dlrm
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROWS_PER_TABLE = (40, 24, 64, 8)
+OFFSETS = table_offsets(ROWS_PER_TABLE)
+
+
+def _inputs(B=6, H=4, D=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    T = len(ROWS_PER_TABLE)
+    pool = jax.random.normal(key, (sum(ROWS_PER_TABLE), D))
+    idx = jnp.stack(
+        [jax.random.randint(jax.random.fold_in(key, t), (B, H), 0, rows)
+         for t, rows in enumerate(ROWS_PER_TABLE)], axis=1)
+    w = jax.random.uniform(jax.random.fold_in(key, 99), (B, T, H),
+                           minval=0.1, maxval=2.0)
+    return pool, idx, w
+
+
+def test_table_offsets():
+    assert OFFSETS == (0, 40, 64, 128)
+    assert table_offsets([5]) == (0,)
+
+
+@pytest.mark.parametrize("combiner", ["sum", "mean", "max"])
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("method", ["xla", "interpret"])
+def test_fused_forward_matches_ref(combiner, weighted, method):
+    pool, idx, w = _inputs()
+    weights = w if weighted else None
+    out = fused_embedding_bag(pool, idx, weights, offsets=OFFSETS,
+                              combiner=combiner, method=method, block_b=4)
+    expect = ref.fused_embedding_bag_ref(pool, idx, weights, offsets=OFFSETS,
+                                         combiner=combiner)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_partial_batch_block():
+    """B not divisible by block_b exercises the clamped tail block."""
+    pool, idx, _ = _inputs(B=7)
+    out = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                              method="interpret", block_b=4)
+    expect = ref.fused_embedding_bag_ref(pool, idx, offsets=OFFSETS,
+                                         combiner="sum")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("combiner", ["sum", "mean", "max"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_fused_grads_match_ref(combiner, weighted):
+    pool, idx, w = _inputs()
+    weights = w if weighted else None
+
+    def loss_fused(p, wt):
+        out = fused_embedding_bag(p, idx, wt, offsets=OFFSETS,
+                                  combiner=combiner)
+        return jnp.sum(jnp.sin(out))
+
+    def loss_ref(p, wt):
+        out = ref.fused_embedding_bag_ref(p, idx, wt, offsets=OFFSETS,
+                                          combiner=combiner)
+        return jnp.sum(jnp.sin(out))
+
+    if weighted:
+        gp_f, gw_f = jax.grad(loss_fused, argnums=(0, 1))(pool, weights)
+        gp_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(pool, weights)
+        np.testing.assert_allclose(np.asarray(gw_f), np.asarray(gw_r),
+                                   atol=1e-5, rtol=1e-5)
+    else:
+        gp_f = jax.grad(loss_fused)(pool, None)
+        gp_r = jax.grad(loss_ref)(pool, None)
+    np.testing.assert_allclose(np.asarray(gp_f), np.asarray(gp_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_grad_through_pallas_forward():
+    """The custom VJP makes the Pallas forward trainable (interpret here)."""
+    pool, idx, _ = _inputs()
+    g_int = jax.grad(lambda p: jnp.sum(fused_embedding_bag(
+        p, idx, offsets=OFFSETS, combiner="mean", method="interpret",
+        block_b=4)))(pool)
+    g_ref = jax.grad(lambda p: jnp.sum(ref.fused_embedding_bag_ref(
+        p, idx, offsets=OFFSETS, combiner="mean")))(pool)
+    np.testing.assert_allclose(np.asarray(g_int), np.asarray(g_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_max_grad_with_duplicate_indices():
+    """Duplicate rows in one bag tie the max; split must match jax.grad."""
+    pool, idx, _ = _inputs()
+    idx = idx.at[:, :, 1].set(idx[:, :, 0])    # force in-bag duplicates
+    g_f = jax.grad(lambda p: jnp.sum(fused_embedding_bag(
+        p, idx, offsets=OFFSETS, combiner="max")))(pool)
+    g_r = jax.grad(lambda p: jnp.sum(ref.fused_embedding_bag_ref(
+        p, idx, offsets=OFFSETS, combiner="max")))(pool)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_grad_is_sparse_scatter():
+    """Rows never looked up get exactly zero gradient (segment_sum dedup)."""
+    pool, idx, _ = _inputs()
+    g = jax.grad(lambda p: jnp.sum(fused_embedding_bag(
+        p, idx, offsets=OFFSETS, combiner="sum")))(pool)
+    flat = (idx + jnp.asarray(OFFSETS)[None, :, None]).reshape(-1)
+    untouched = np.setdiff1d(np.arange(pool.shape[0]), np.asarray(flat))
+    assert untouched.size > 0
+    np.testing.assert_array_equal(np.asarray(g)[untouched], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer: exactly one fused call per forward component
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("base,expected_calls",
+                         [(WIDE_DEEP, 2), (XDEEPFM, 1), (DCN, 1)])
+def test_dlrm_forward_single_fused_call(base, expected_calls, monkeypatch):
+    cfg = reduced_dlrm(base)
+    params = dlrm.init_dlrm(cfg, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v)
+             for k, v in criteo_batch(cfg, 7, np.arange(8)).items()}
+
+    calls = []
+    real = ops.fused_embedding_bag
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("combiner", "sum"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "fused_embedding_bag", counting)
+    logit = dlrm.dlrm_forward(params, batch, cfg)
+    assert logit.shape == (8,)
+    assert len(calls) == expected_calls, calls
+    # no other embedding dispatch sneaks in
+    monkeypatch.setattr(ops, "embedding_bag",
+                        lambda *a, **k: pytest.fail("per-table path used"))
+    dlrm.dlrm_forward(params, batch, cfg)
+
+
+def test_dlrm_pooled_param_layout():
+    cfg = reduced_dlrm(WIDE_DEEP)
+    params = dlrm.init_dlrm(cfg, jax.random.PRNGKey(0))
+    D = cfg.embed_dim
+    assert params["tables"].shape == (cfg.total_embedding_rows, D)
+    assert params["wide"].shape == (cfg.total_embedding_rows, 1)
+    specs = dlrm.dlrm_param_specs(cfg)
+    assert specs["tables"] == ("vocab", None)
+    assert specs["wide"] == ("vocab", None)
+    assert cfg.table_offsets == tuple(
+        int(x) for x in np.cumsum((0,) + cfg.table_rows[:-1]))
+
+
+# ---------------------------------------------------------------------------
+# legacy single-table contract: weights compose with every combiner
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("combiner", ["sum", "mean", "max"])
+def test_legacy_embedding_bag_weighted_combiner(combiner):
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (50, 16))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (6, 4), 0, 50)
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (6, 4))
+    out = legacy_eb.embedding_bag(table, idx, w, combiner=combiner,
+                                  interpret=True)
+    expect = ref.embedding_bag_ref(table, idx, w, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("combiner", ["sum", "mean", "max"])
+def test_ops_embedding_bag_weighted_combiner(combiner):
+    """ops dispatch applies weights before the combiner on every impl."""
+    key = jax.random.PRNGKey(3)
+    table = jax.random.normal(key, (30, 8))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (5, 3), 0, 30)
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (5, 3))
+    expect = ref.embedding_bag_ref(table, idx, w, combiner=combiner)
+    for impl in ("xla", "interpret"):
+        out = ops.embedding_bag(table, idx, w, combiner=combiner, impl=impl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=1e-5, rtol=1e-5,
+                                   err_msg=f"impl={impl}")
+
+
+# ---------------------------------------------------------------------------
+# max-combiner init constant: one shared NEG_INF, adversarial inputs
+# ---------------------------------------------------------------------------
+def test_neg_inf_constant_shared():
+    assert legacy_eb.NEG_INF == common.NEG_INF
+    assert ref.NEG_INF == common.NEG_INF
+    assert common.NEG_INF < -1e38       # true max identity for finite f32
+
+
+def test_max_pooling_adversarial_very_negative_rows():
+    """Rows below the old -1e30 init must still win the max."""
+    table = jnp.full((8, 16), -1.5e31, jnp.float32)
+    idx = jnp.array([[0, 3, 5], [1, 1, 7]], jnp.int32)
+    expect = ref.embedding_bag_ref(table, idx, combiner="max")
+    np.testing.assert_allclose(np.asarray(expect), -1.5e31)
+    out_legacy = legacy_eb.embedding_bag(table, idx, combiner="max",
+                                         interpret=True)
+    np.testing.assert_allclose(np.asarray(out_legacy), np.asarray(expect))
+    out_fused = fused_embedding_bag(table, idx[:, None, :], offsets=(0,),
+                                    combiner="max", method="interpret")
+    np.testing.assert_allclose(np.asarray(out_fused[:, 0]), np.asarray(expect))

@@ -1,6 +1,6 @@
 """NSGA-II properties: Pareto-front validity, dominance, convergence."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.nsga2 import fast_non_dominated_sort, Individual, nsga2
 

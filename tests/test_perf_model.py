@@ -1,7 +1,7 @@
 """Resource-performance model (Eqns 1–6): NNLS fit recovery + invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.perf_model import (
     JobResources, JobStatics, PerfModel, feature_vector, synthesize_t_iter,

@@ -2,7 +2,7 @@
 (failures, stragglers, elastic worker churn). Hypothesis drives the chaos.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sharding_service import ShardingService
 
