@@ -8,7 +8,6 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
 
 from benchmarks.common import Row
 import repro.sim.cluster as C

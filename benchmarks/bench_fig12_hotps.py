@@ -15,11 +15,10 @@ import time
 from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row
-from repro.core.migration import MigrationPlan, MigrationTimings
+from repro.core.migration import MigrationPlan
 from repro.sim.cluster import CloudSim, TIMINGS
 from repro.sim.workload import generate_jobs
 
@@ -94,9 +93,7 @@ def run() -> List[Row]:
                    for i in range(40)]}          # ~40 MB
     with tempfile.TemporaryDirectory() as d:
         ck = FlashCheckpoint(d, async_persist=False)
-        t0 = time.perf_counter()
         ck.save(state, 1)
-        total_save = time.perf_counter() - t0
         mem_save = ck.last_save_seconds
         disk_save = ck.last_persist_seconds
         like = jax.tree.map(lambda a: np.zeros(a.shape, np.float32), state)
@@ -108,4 +105,39 @@ def run() -> List[Row]:
     rows.append(("flash_restore_s", restore_s, ""))
     rows.append(("flash_speedup", disk_save / max(mem_save, 1e-9),
                  "mem tier vs disk tier"))
+
+    # --- hot-PS at placement time: skewed rows -> cache + balanced ranges ---
+    # The same power-law row popularity that overloads one PS is what the
+    # fused embedding engine's hot-row cache and the RecShard-style placement
+    # plan exploit (see bench_kernels' skew section for the wall-time side).
+    import dataclasses as _dc
+    from repro.configs.dlrm_models import WIDE_DEEP, reduced_dlrm
+    from repro.core.sharding_service import ParameterPlacementService
+    from repro.data.synthetic import criteo_batch
+    from repro.sharding.policy import placement_imbalance
+
+    cfg = _dc.replace(reduced_dlrm(WIDE_DEEP), table_rows=(512,) * 6,
+                      zipf_alpha=1.05, hot_rows_k=96)
+    svc = ParameterPlacementService(cfg.table_rows)
+    for lo in range(0, 1024, 256):
+        batch = criteo_batch(cfg, 11, np.arange(lo, lo + 256))
+        svc.report_batch("w0", batch["sparse"])
+    counts = svc.counts
+    plan = svc.hot_plan(cfg.hot_rows_k)
+    hot_mass = sum(int(counts[o:o + k].sum())
+                   for o, k in zip(cfg.table_offsets, plan))
+    rows.append(("hotps_cache_hit_rate", hot_mass / max(counts.sum(), 1),
+                 f"VMEM cache absorbs this lookup share at K={cfg.hot_rows_k}"))
+    rows.append(("hotps_cache_rows_frac",
+                 sum(plan) / cfg.total_embedding_rows,
+                 "cached fraction of pooled rows"))
+    n_ps = 4
+    uniform = [(i * cfg.total_embedding_rows // n_ps,
+                (i + 1) * cfg.total_embedding_rows // n_ps)
+               for i in range(n_ps)]
+    rows.append(("hotps_imbalance_uniform_striping",
+                 placement_imbalance(counts, uniform),
+                 "max/mean PS load, uniform vocab split"))
+    rows.append(("hotps_imbalance_balanced_ranges", svc.imbalance(n_ps),
+                 "max/mean PS load, frequency-balanced ranges"))
     return rows

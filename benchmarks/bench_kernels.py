@@ -2,12 +2,19 @@
 correctness spot checks. Real TPU timings are out of scope on this host — the
 structural (roofline) analysis of the kernels lives in benchmarks/roofline.py.
 
-The headline comparison is the fused multi-table embedding engine (one take +
-segment_sum over the pooled tables, custom sparse-gradient VJP) against the
-legacy per-table Python loop, forward and forward+backward.
+Headline comparisons:
+  * fused multi-table embedding engine (one take + segment_sum over the
+    pooled tables, custom sparse-gradient VJP) vs the legacy per-table loop;
+  * skew-aware engine on a zipfian (α≈1.05) stream at Criteo-ish shapes —
+    PR 1's fused kernel on a hashed (scattered) layout vs the frequency-
+    packed placement + hot-row cache engine, uniform traffic as control.
+
+``REPRO_BENCH_FAST=1`` (the runner's ``--fast``) shrinks every shape so the
+CI bench-smoke job finishes in a couple of minutes.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -16,9 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row
+from repro.data.synthetic import RowFreqCounter, zipf_indices
 from repro.kernels import ref
 from repro.kernels.fused_embedding import fused_embedding_bag, table_offsets
 from repro.models.attention import chunked_attention
+from repro.sharding.policy import pack_hot_ranges
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "") == "1"
 
 
 def _time(fn, *args, iters=5, repeats=3) -> float:
@@ -86,10 +97,14 @@ def run() -> List[Row]:
     out_p = fused_embedding_bag(pool, sidx, offsets=offs, combiner="sum",
                                 method="interpret", block_b=8)
     err = float(jnp.abs(out_p - f_fused(pool, sidx)).max())
-    rows.append(("fused_embedding_pallas_err", err, "interpret vs ref, B=32"))
+    rows.append(("fused_embedding_pallas_err", err,
+                 "double-buffered interpret vs ref, B=32"))
+
+    # --- skew-aware engine: zipfian stream, placement + hot-row cache -------
+    rows.extend(_skew_rows())
 
     # --- chunked attention (the dry-run lowering path) ----------------------
-    B, S, Hh, Dh = 1, 1024, 8, 64
+    B, S, Hh, Dh = (1, 256, 8, 64) if FAST else (1, 1024, 8, 64)
     q = jax.random.normal(jax.random.fold_in(key, 4), (B, S, Hh, Dh), jnp.float32)
     k = jax.random.normal(jax.random.fold_in(key, 5), (B, S, Hh // 2, Dh))
     v = jax.random.normal(jax.random.fold_in(key, 6), (B, S, Hh // 2, Dh))
@@ -103,4 +118,88 @@ def run() -> List[Row]:
     rows.append(("windowed_attention_us", us_local, "window=128 (sub-quadratic)"))
     rows.append(("local_vs_global_speedup", us / max(us_local, 1e-9),
                  "window cuts O(S^2) -> O(S*W)"))
+    return rows
+
+
+def _skew_rows() -> List[Row]:
+    """Zipfian vs uniform traffic: PR 1's fused kernel on a hashed (scattered)
+    row layout against the skew-aware engine (frequency-packed placement +
+    hot-row cache). Ties into the bench_fig12_hotps skew scenario: the same
+    power-law row popularity that overloads one PS is what the placement
+    plan and the VMEM cache exploit.
+    """
+    rows: List[Row] = []
+    if FAST:
+        T, H, B, D, R_t, budget = 8, 4, 256, 16, 20_000, 8 * 128
+    else:
+        T, H, B, D, R_t, budget = 26, 4, 512, 16, 1_000_000, 26 * 512
+    alpha = 1.05
+    offs = table_offsets((R_t,) * T)
+    note = f"B={B} T={T} hot={H} D={D} R={R_t}/table alpha={alpha}"
+
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.standard_normal((T * R_t, D), np.float32))
+
+    # popularity ranks drawn from the power law; a hashed vocab scatters them
+    # uniformly over each table (PR 1's layout), frequency-aware placement
+    # packs them into the leading rows (rank == row id)
+    ranks = np.stack([zipf_indices(rng, R_t, (B, H), alpha)
+                      for _ in range(T)], axis=1)            # (B, T, H)
+    perm = np.stack([rng.permutation(R_t) for _ in range(T)])
+    scattered = perm[np.arange(T)[None, :, None], ranks]
+    uniform = rng.integers(0, R_t, (B, T, H))
+
+    # plan the cache from measured frequencies, through the real stack
+    ctr = RowFreqCounter((R_t,) * T)
+    ctr.update(ranks)
+    plan = pack_hot_ranges(ctr.counts, (R_t,) * T, budget)
+    hit = ctr.hit_rate(plan)
+    rows.append(("embed_cache_hit_rate_zipf", hit,
+                 f"top-{budget} rows ({budget / (T * R_t):.2%} of pool)"))
+
+    def fused(p, i):
+        return fused_embedding_bag(p, i, offsets=offs, combiner="sum")
+
+    def engine(p, i):
+        return fused_embedding_bag(p, i, offsets=offs, combiner="sum",
+                                   table_hot=plan)
+
+    f_fused = jax.jit(fused)
+    f_engine = jax.jit(engine)
+    j_scat = jnp.asarray(scattered.astype(np.int32))
+    j_pack = jnp.asarray(ranks.astype(np.int32))
+    j_unif = jnp.asarray(uniform.astype(np.int32))
+
+    iters = 10 if FAST else 20
+    us_scat = _time(f_fused, pool, j_scat, iters=iters)
+    us_pack = _time(f_fused, pool, j_pack, iters=iters)
+    us_cache = _time(f_engine, pool, j_pack, iters=iters)
+    us_unif = _time(f_fused, pool, j_unif, iters=iters)
+    us_unif_c = _time(f_engine, pool, j_unif, iters=iters)
+    rows.append(("embed_fwd_zipf_scattered_us", us_scat,
+                 f"PR1 fused, hashed layout; {note}"))
+    rows.append(("embed_fwd_zipf_packed_us", us_pack,
+                 "freq-packed placement, no cache (ablation)"))
+    rows.append(("embed_fwd_zipf_cache_us", us_cache,
+                 "engine: packed placement + hot-row cache"))
+    rows.append(("embed_fwd_zipf_cache_speedup", us_scat / max(us_cache, 1e-9),
+                 "fused+cache vs PR1 fused on zipfian stream"))
+    rows.append(("embed_fwd_uniform_us", us_unif, "PR1 fused, uniform control"))
+    rows.append(("embed_fwd_uniform_cache_parity",
+                 us_unif / max(us_unif_c, 1e-9),
+                 "engine on uniform traffic (expect ~1.0, no regression)"))
+
+    # interpret-mode numerics: the double-buffered cache path must BIT-match
+    # the XLA fallback (small shapes; the interpreter is slow)
+    sm = 16
+    out_c = fused_embedding_bag(pool[:8 * 64], ranks[:sm, :8, :].clip(0, 63),
+                                offsets=table_offsets((64,) * 8),
+                                combiner="sum", method="interpret", block_b=8,
+                                table_hot=(16,) * 8)
+    out_x = fused_embedding_bag(pool[:8 * 64], ranks[:sm, :8, :].clip(0, 63),
+                                offsets=table_offsets((64,) * 8),
+                                combiner="sum", method="xla")
+    exact = float(np.asarray(jnp.abs(out_c - out_x)).max())
+    rows.append(("fused_cache_interpret_err", exact,
+                 "hot-row cache interpret vs XLA (0 = bit-exact)"))
     return rows

@@ -6,7 +6,6 @@ flash-checkpoint, and resume. Real JAX training on CPU, a few hundred steps.
     PYTHONPATH=src python examples/elastic_dlrm_train.py [--steps 300]
 """
 import argparse
-import dataclasses
 import tempfile
 import time
 

@@ -6,12 +6,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     PYTHONPATH=src python experiments/dump_collectives.py --arch X --shape Y
 """
 import argparse
-import re
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.launch.dryrun import lower_cell, _SHAPE_RE, _DTYPE_BYTES, _COLL_OPS  # noqa
+from repro.launch.dryrun import _SHAPE_RE, _DTYPE_BYTES, _COLL_OPS
 
 
 def main():
@@ -72,7 +71,6 @@ def main():
     comp = "main"
     for line in hlo.splitlines():
         s = line.strip()
-        m = re.match(r"%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{$", s)
         if s.endswith("{") and ("(" in s) and "->" in s:
             comp = s.split()[0].lstrip("%")
         for op in _COLL_OPS:

@@ -6,7 +6,6 @@ import argparse
 import glob
 import json
 import os
-import sys
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -7,8 +7,8 @@ CPU smoke tests). ``repro.configs.registry`` resolves ``--arch <id>`` strings.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Layer-pattern vocabulary
@@ -154,7 +154,6 @@ class ModelConfig:
         for kind in self.layer_kinds:
             total += per_kind[kind]
         if self.encoder_layers:
-            enc = (attn + mlp + norms) + (attn + d)        # self-attn + cross-kv
             total += self.encoder_layers * (per_kind["global"])
             total += self.num_layers * (d * nkv * hd * 2 + d)  # cross-attn kv+norm
         total += d                                          # final norm

@@ -6,8 +6,8 @@ Batch size 512 matches the paper's evaluation setup (§6).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -25,6 +25,12 @@ class DLRMConfig:
     batch_size: int = 512
     pooling: str = "sum"                # sum | mean | max (paper §2.1)
     multi_hot: int = 4                  # lookups per table per sample
+    # power-law skew of the synthetic sparse-feature stream (0 = uniform);
+    # α≈1.05 matches the heavy row-popularity skew RecShard reports
+    zipf_alpha: float = 0.0
+    # hot-row cache budget: total pooled rows mirrored into the fused
+    # engine's VMEM cache (0 disables). Split per table by `table_hot`.
+    hot_rows_k: int = 0
 
     def __post_init__(self):
         if not self.table_rows:
@@ -44,6 +50,23 @@ class DLRMConfig:
         """Exclusive per-table row offsets into the pooled (R, D) table."""
         from repro.kernels.fused_embedding import table_offsets
         return table_offsets(self.table_rows)
+
+    @property
+    def table_hot(self) -> Optional[Tuple[int, ...]]:
+        """Default per-table hot-prefix sizes for the fused engine's cache.
+
+        Splits ``hot_rows_k`` evenly across tables (clipped to each table's
+        rows, remainder to the leading tables) — the right default for the
+        synthetic stream, whose skew is homogeneous across tables. The total
+        never exceeds the ``hot_rows_k`` budget, which bounds the VMEM
+        reservation. Frequency-aware jobs override this with
+        ``repro.sharding.policy.pack_hot_ranges`` on measured counts.
+        """
+        if self.hot_rows_k <= 0:
+            return None
+        per, rem = divmod(self.hot_rows_k, self.n_tables)
+        return tuple(min(int(r), per + (1 if t < rem else 0))
+                     for t, r in enumerate(self.table_rows))
 
     def param_count(self) -> int:
         emb = self.total_embedding_rows * self.embed_dim

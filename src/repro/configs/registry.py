@@ -3,7 +3,9 @@ from __future__ import annotations
 
 from typing import Dict
 
-from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduce_config, shape_applicable
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, shape_applicable,
+)
 from repro.configs import (
     llama3_2_3b, minitron_8b, gemma3_27b, command_r_35b, chameleon_34b,
     mamba2_2_7b, recurrentgemma_2b, whisper_medium, granite_moe_1b,

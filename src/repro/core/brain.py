@@ -12,7 +12,7 @@ executor (job level). The life cycle:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.autoscaler import (
     ClusterCapacity, JobState, Prices, ScalingOverheads, get_scaler,

@@ -12,7 +12,7 @@ clock-driven so the simulator and real integrations share it; real hooks
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 

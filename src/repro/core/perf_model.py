@@ -20,7 +20,7 @@ size, λ ↔ chips per node, B ↔ ICI bandwidth (see DESIGN.md §2).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 from scipy.optimize import nnls

@@ -1,4 +1,4 @@
-"""Dynamic data sharding (paper §5.1).
+"""Dynamic data sharding (paper §5.1) + frequency-aware parameter placement.
 
 The job master splits the dataset into numerous small, variably-sized shards
 kept in a *shards queue*. Workers fetch shards on demand, send periodic
@@ -9,6 +9,13 @@ heartbeats carrying *progress offsets*, and report completion. The service:
 * lets new/restarted workers pull work immediately (fast elasticity),
 * guarantees exactly-once *completion* coverage of the sample range.
 
+``ParameterPlacementService`` is the job master's second planning duty: it
+aggregates the per-row embedding access counts workers piggyback on their
+heartbeats and serves RecShard-style placement plans — hot-row cache prefixes
+for the fused embedding engine and balanced contiguous PS row ranges instead
+of uniform vocab striping (the paper's hot-PS problem, §2.1/Fig 12, attacked
+at placement time).
+
 All methods take an explicit ``now`` timestamp so the service runs identically
 under the simulator's virtual clock and a wall clock.
 """
@@ -16,8 +23,10 @@ from __future__ import annotations
 
 import collections
 import threading
-from dataclasses import dataclass, field, replace
-from typing import Deque, Dict, List, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -202,3 +211,66 @@ class ShardingService:
             complete = (covered == self.total and dup == 0
                         and not in_flight and not pending)
             return complete, covered, dup
+
+
+# ---------------------------------------------------------------------------
+# Frequency-aware parameter placement (job-master side, RecShard-style)
+# ---------------------------------------------------------------------------
+class ParameterPlacementService:
+    """Aggregates worker row-access reports into placement plans.
+
+    Workers attach per-row embedding lookup *count deltas* (or raw (B, T, H)
+    index tensors) to their heartbeats; the job master accumulates them into
+    one pooled histogram and answers two planning queries:
+
+    * ``hot_plan(budget)`` — per-table hot-prefix sizes for the fused
+      embedding engine's VMEM cache (``pack_hot_ranges``),
+    * ``ps_ranges(n_ps)`` — contiguous pooled-row ranges with balanced
+      access mass for the PS shards (``balanced_vocab_ranges``), replacing
+      uniform vocab striping that funnels skewed traffic onto one hot PS.
+
+    Thread-safe like ``ShardingService``; plans are cheap enough to recompute
+    on demand, so there is no cached/stale state to invalidate.
+    """
+
+    def __init__(self, table_rows: Sequence[int]):
+        from repro.data.synthetic import RowFreqCounter
+        self._ctr = RowFreqCounter(table_rows)   # owns the pooled histogram
+        self.table_rows = self._ctr.table_rows
+        self.offsets = self._ctr.offsets
+        self.total_rows = self._ctr.total_rows
+        self._lock = threading.Lock()
+        self._reports: Dict[str, int] = {}
+
+    def report_counts(self, worker: str, counts: np.ndarray) -> None:
+        """Merge a worker's per-row lookup count *delta* (pooled layout)."""
+        counts = np.asarray(counts)
+        assert counts.shape == (self.total_rows,), counts.shape
+        with self._lock:
+            self._ctr.counts += counts
+            self._ctr.n_lookups += int(counts.sum())
+            self._reports[worker] = self._reports.get(worker, 0) + 1
+
+    def report_batch(self, worker: str, sparse: np.ndarray) -> None:
+        """Merge one batch of (B, T, H) per-table-local indices directly."""
+        with self._lock:
+            self._ctr.update(sparse)
+            self._reports[worker] = self._reports.get(worker, 0) + 1
+
+    @property
+    def counts(self) -> np.ndarray:
+        with self._lock:
+            return self._ctr.counts.copy()
+
+    def hot_plan(self, budget: int) -> Tuple[int, ...]:
+        from repro.sharding.policy import pack_hot_ranges
+        return pack_hot_ranges(self.counts, self.table_rows, budget)
+
+    def ps_ranges(self, n_ps: int) -> List[Tuple[int, int]]:
+        from repro.sharding.policy import balanced_vocab_ranges
+        return balanced_vocab_ranges(self.counts, n_ps)
+
+    def imbalance(self, n_ps: int) -> float:
+        """max/mean PS load under the current balanced plan (1.0 = ideal)."""
+        from repro.sharding.policy import placement_imbalance
+        return placement_imbalance(self.counts, self.ps_ranges(n_ps))

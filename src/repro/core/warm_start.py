@@ -9,8 +9,8 @@ ordered from least to most similar so the most similar job dominates:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional
 
 from repro.core.perf_model import JobResources
 

@@ -11,7 +11,7 @@ few "informative" embedding buckets.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -22,9 +22,89 @@ def _rng_for(seed: int, idx_block: int) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence([seed, idx_block]))
 
 
+# --- power-law (zipfian) sparse-feature ids -------------------------------------
+def zipf_indices(rng: np.random.Generator, rows: int, size,
+                 alpha: float) -> np.ndarray:
+    """Bounded-Zipf row ids in ``[0, rows)``: P(id = i) ∝ (i + 1)^-alpha.
+
+    ``alpha = 0`` degenerates to the uniform distribution. Ids are popularity
+    *ranks* — id 0 is the hottest row — which is exactly the frequency-packed
+    placement the hot-row cache assumes (real systems obtain it by remapping
+    hashed ids through ``repro.sharding.policy.frequency_permutation``).
+    Sampling is O(size) via the continuous inverse CDF.
+    """
+    if alpha <= 0.0:
+        return rng.integers(0, rows, size)
+    u = rng.random(size)
+    if abs(alpha - 1.0) < 1e-9:
+        x = np.exp(u * np.log(rows))
+    else:
+        x = ((rows ** (1.0 - alpha) - 1.0) * u + 1.0) ** (1.0 / (1.0 - alpha))
+    # x is continuous in [1, rows]; floor then shift so ranks start at 0
+    return np.minimum(x.astype(np.int64), rows) - 1
+
+
+class RowFreqCounter:
+    """Streaming per-row access-frequency estimator over the pooled table.
+
+    Feed it per-batch (B, T, H) local index tensors; it accumulates exact
+    lookup counts per *global* pool row. The counts drive the RecShard-style
+    placement planners (``pack_hot_ranges`` / ``balanced_vocab_ranges``) and
+    the fused engine's hot-row cache sizing.
+    """
+
+    def __init__(self, table_rows: Sequence[int]):
+        self.table_rows = tuple(int(r) for r in table_rows)
+        self.offsets = np.concatenate(
+            ([0], np.cumsum(self.table_rows)[:-1])).astype(np.int64)
+        self.total_rows = int(sum(self.table_rows))
+        self.counts = np.zeros((self.total_rows,), np.int64)
+        self.n_lookups = 0
+
+    def update(self, sparse: np.ndarray) -> None:
+        """sparse: (B, T, H) per-table-local ids from one batch."""
+        sparse = np.asarray(sparse)
+        flat = (sparse + self.offsets[None, :, None]).reshape(-1)
+        self.counts += np.bincount(flat, minlength=self.total_rows)
+        self.n_lookups += flat.size
+
+    def top_k(self, k: int) -> np.ndarray:
+        """Global row ids of the k most-frequent rows (hottest first)."""
+        k = min(int(k), self.total_rows)
+        part = np.argpartition(self.counts, -k)[-k:]
+        return part[np.argsort(-self.counts[part], kind="stable")]
+
+    def hit_rate(self, table_hot: Sequence[int]) -> float:
+        """Fraction of observed lookups a per-table hot-prefix cache serves."""
+        if self.n_lookups == 0:
+            return 0.0
+        hot = 0
+        for off, k in zip(self.offsets, table_hot):
+            hot += int(self.counts[off:off + int(k)].sum())
+        return hot / self.n_lookups
+
+
+def estimate_row_freq(cfg: DLRMConfig, seed: int, n_samples: int = 2048,
+                      batch_size: int = 256,
+                      start: int = 0) -> RowFreqCounter:
+    """Row-frequency estimate from a deterministic synthetic sample range."""
+    ctr = RowFreqCounter(cfg.table_rows)
+    for lo in range(start, start + n_samples, batch_size):
+        hi = min(lo + batch_size, start + n_samples)
+        batch = criteo_batch(cfg, seed, np.arange(lo, hi))
+        ctr.update(batch["sparse"])
+    return ctr
+
+
 # --- Criteo-like CTR samples ----------------------------------------------------
-def criteo_batch(cfg: DLRMConfig, seed: int, indices: np.ndarray) -> Dict[str, np.ndarray]:
-    """indices: (B,) absolute sample ids -> batch dict (dense/sparse/label)."""
+def criteo_batch(cfg: DLRMConfig, seed: int, indices: np.ndarray,
+                 zipf_alpha: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """indices: (B,) absolute sample ids -> batch dict (dense/sparse/label).
+
+    ``zipf_alpha`` (default ``cfg.zipf_alpha``) skews the sparse-feature ids
+    to a power law; 0 keeps the original uniform stream byte-identical.
+    """
+    alpha = cfg.zipf_alpha if zipf_alpha is None else zipf_alpha
     B = len(indices)
     dense = np.empty((B, cfg.n_dense), np.float32)
     sparse = np.empty((B, cfg.n_tables, cfg.multi_hot), np.int64)
@@ -34,7 +114,10 @@ def criteo_batch(cfg: DLRMConfig, seed: int, indices: np.ndarray) -> Dict[str, n
         rng = _rng_for(seed, int(idx))
         dense[i] = rng.normal(0, 1, cfg.n_dense).astype(np.float32)
         for t, rows in enumerate(cfg.table_rows):
-            sparse[i, t] = rng.integers(0, rows, cfg.multi_hot)
+            if alpha > 0.0:
+                sparse[i, t] = zipf_indices(rng, rows, cfg.multi_hot, alpha)
+            else:
+                sparse[i, t] = rng.integers(0, rows, cfg.multi_hot)
         # informative structure: dense projection + parity of first buckets
         logit = float(dense[i] @ w_dense)
         logit += 0.5 * ((sparse[i, 0, 0] % 2) - 0.5) * 2

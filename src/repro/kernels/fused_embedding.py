@@ -1,10 +1,10 @@
-"""Fused multi-table embedding engine: one kernel + sparse-gradient VJP.
+"""Fused multi-table embedding engine: pipelined DMA + hot-row cache + sparse VJP.
 
 The paper's #1 hot spot is embedding lookups (30–48 % of DLRM iteration time,
 §1 Fig 1a). The naive formulation issues one gather/pool per table — for a
 Criteo-style model that is 26 kernel launches per step, each with its own grid
 setup, and 26 scatter-adds in the backward pass. This module fuses *all*
-tables into a single call at three levels:
+tables into a single call and pipelines the memory traffic:
 
 Pooled-table layout
     Every table shares the embedding width ``D``, so the ``T`` tables are
@@ -14,15 +14,31 @@ Pooled-table layout
     ``(B, T, H)`` becomes global pool rows by adding ``offsets[t]`` — after
     which the table dimension is just another axis of one big gather.
 
-Forward (Pallas path)
-    The grid is ``(ceil(B/block_b), T)``. Each step receives its
-    ``(block_b, 1, H)`` slice of the offset-adjusted index tensor as a tiny
-    SMEM block (staged per step — the whole index tensor never has to fit in
-    SMEM, which matters at Criteo scale), DMAs the ``block_b * H`` rows it
-    names from the HBM pool into a VMEM staging buffer (async copies issued
-    back-to-back, then drained), and reduces them vectorized into a
-    ``(block_b, 1, D)`` output block. One kernel launch serves every table,
-    every combiner (sum/mean/max), weighted or not.
+Hot-row cache (skew-aware placement contract)
+    Real sparse-feature traffic is power-law skewed: a tiny fraction of rows
+    serves most lookups (RecShard / MTrainS). Under frequency-aware placement
+    the hot rows of table ``t`` are *packed* into its leading local ids
+    ``[0, table_hot[t])`` (see ``repro.sharding.policy.pack_hot_ranges``).
+    The engine mirrors those prefixes into a VMEM-resident cache
+    ``(sum(table_hot), D)`` and consults it before issuing any HBM DMA: hot
+    lookups become direct VMEM loads, only the cold tail pays an HBM round
+    trip. On the XLA path the packed prefix *is* the cache — it stays
+    hardware-cache-resident by construction, so no extra gather is issued.
+    The custom-VJP backward is unchanged either way because global row ids
+    are preserved (the cache only re-routes forward reads).
+
+Forward (Pallas path, double-buffered)
+    The grid is ``(ceil(B/block_b), T)``; the batch is padded on the host to
+    a whole number of blocks so no grid step ever sees unspecified block
+    padding. Each step receives its ``(block_b, 1, H)`` slice of the
+    *encoded* index tensor as a tiny SMEM block (hot lookups are encoded as
+    ``-(cache_slot+1)``, cold ones as the global pool row). Row staging is
+    double-buffered across grid steps — two VMEM staging buffers and two DMA
+    semaphores: while step ``i`` drains its buffer and reduces it into a
+    ``(block_b, 1, D)`` output block, step ``i``'s body has already issued
+    the copies for step ``i+1`` into the other buffer (the next step's index
+    slice is delivered through a second, look-ahead SMEM block), so HBM copy
+    latency overlaps the reduction instead of serializing with it.
 
 Forward (XLA fallback)
     One ``jnp.take`` over the pool + one reduction over the hot axis — no
@@ -36,7 +52,8 @@ Backward (custom VJP — the paper's sparse-gradient aggregation)
     max via a tie-normalized argmax mask matching ``jax.grad``-of-``jnp.max``
     semantics) and aggregates duplicate rows with a single
     ``jax.ops.segment_sum`` over the flattened global indices — deduplication
-    and scatter-add in one fused op, shared by every impl.
+    and scatter-add in one fused op, shared by every impl. Cached rows need
+    no special casing: their cotangents land on the same global ids.
 """
 from __future__ import annotations
 
@@ -45,6 +62,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -60,77 +78,200 @@ def table_offsets(table_rows: Sequence[int]) -> Tuple[int, ...]:
     return tuple(offs)
 
 
-# ---------------------------------------------------------------------------
-# Pallas kernel: (ceil(B/block_b), T) grid, block_b*H rows DMA'd per step
-# ---------------------------------------------------------------------------
-def _fused_kernel(idx_ref, pool_ref, *refs,
-                  R: int, H: int, block_b: int, combiner: str,
-                  weighted: bool):
-    # refs = (w_ref?, out_ref, stage_ref, sem); w_ref present iff weighted
-    if weighted:
-        w_ref, out_ref, stage_ref, sem = refs
-    else:
-        out_ref, stage_ref, sem = refs
+def cache_slot_offsets(table_hot: Sequence[int]) -> Tuple[int, ...]:
+    """Exclusive cumulative cache-slot offsets of the per-table hot prefixes."""
+    return table_offsets(table_hot)
 
-    copies = []
+
+def hot_row_ids(offsets: Sequence[int], table_hot: Sequence[int]) -> np.ndarray:
+    """Global pool row ids mirrored by the cache (per-table leading ranges)."""
+    parts = [np.arange(o, o + k, dtype=np.int64)
+             for o, k in zip(offsets, table_hot) if k > 0]
+    if not parts:
+        return np.zeros((0,), np.int64)
+    return np.concatenate(parts)
+
+
+def encode_hot_indices(idx, offsets: Sequence[int],
+                       table_hot: Sequence[int]):
+    """Route each lookup: hot rows -> ``-(cache_slot+1)``, cold -> global row.
+
+    ``idx`` is the (B, T, H) *global* index tensor (offsets already applied).
+    Hot rows of table ``t`` are its leading local ids ``[0, table_hot[t])``
+    (the frequency-packed placement contract); their cache slots are laid out
+    contiguously per table. Returns ``(encoded, hit)``.
+    """
+    off = jnp.asarray(offsets, jnp.int32)[None, :, None]
+    k = jnp.asarray(table_hot, jnp.int32)[None, :, None]
+    coff = jnp.asarray(cache_slot_offsets(table_hot), jnp.int32)[None, :, None]
+    local = idx - off
+    hit = local < k
+    slot = coff + local
+    return jnp.where(hit, -slot - 1, idx), hit
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: (ceil(B/block_b), T) grid, double-buffered row staging
+# ---------------------------------------------------------------------------
+def _fill_stage(stage_ref, sem, blk_ref, pool_ref, cache_ref, *,
+                R: int, K: int, H: int, block_b: int):
+    """Stage one block's rows: hot slots from VMEM cache, cold rows via DMA."""
     for r in range(block_b):
         for j in range(H):
-            # clip guards padded tail-block rows (unspecified block padding)
-            # and keeps every DMA source inside the pool
-            row = jnp.clip(idx_ref[r, 0, j], 0, R - 1)
+            v = blk_ref[r, 0, j]
+            if cache_ref is None:
+                pltpu.make_async_copy(
+                    pool_ref.at[pl.ds(jnp.clip(v, 0, R - 1), 1), :],
+                    stage_ref.at[r].at[pl.ds(j, 1), :],
+                    sem,
+                ).start()
+            else:
+                @pl.when(v >= 0)
+                def start_cold(v=v, r=r, j=j):
+                    pltpu.make_async_copy(
+                        pool_ref.at[pl.ds(jnp.clip(v, 0, R - 1), 1), :],
+                        stage_ref.at[r].at[pl.ds(j, 1), :],
+                        sem,
+                    ).start()
+
+                @pl.when(v < 0)
+                def copy_hot(v=v, r=r, j=j):
+                    slot = jnp.clip(-v - 1, 0, K - 1)
+                    row = pl.load(cache_ref, (pl.ds(slot, 1), slice(None)))
+                    pl.store(stage_ref,
+                             (pl.ds(r, 1), pl.ds(j, 1), slice(None)),
+                             row[None])
+
+
+def _drain_stage(stage_ref, sem, blk_ref, pool_ref, cached: bool, *,
+                 R: int, H: int, block_b: int):
+    """Wait for exactly the DMAs `_fill_stage` issued for this block."""
+    for r in range(block_b):
+        for j in range(H):
+            v = blk_ref[r, 0, j]
             cp = pltpu.make_async_copy(
-                pool_ref.at[pl.ds(row, 1), :],
+                pool_ref.at[pl.ds(jnp.clip(v, 0, R - 1), 1), :],
                 stage_ref.at[r].at[pl.ds(j, 1), :],
                 sem,
             )
-            cp.start()
-            copies.append(cp)
-    for cp in copies:
-        cp.wait()
-
-    rows = stage_ref[...].astype(jnp.float32)       # (block_b, H, D)
-    if weighted:
-        rows = rows * w_ref[:, 0, :][..., None]     # (block_b, H, 1)
-    if combiner == "max":
-        res = jnp.max(rows, axis=1)
-    else:
-        res = jnp.sum(rows, axis=1)
-        if combiner == "mean":
-            res = res / H
-    out_ref[...] = res[:, None, :].astype(out_ref.dtype)
+            if cached:
+                @pl.when(v >= 0)
+                def wait_cold(cp=cp):
+                    cp.wait()
+            else:
+                cp.wait()
 
 
-def _pallas_forward(pool, flat_idx, weights, *, B, T, H, combiner, block_b,
-                    interpret):
+def _fused_kernel(idx_ref, nxt_ref, pool_ref, *refs,
+                  R: int, K: int, H: int, block_b: int, combiner: str,
+                  weighted: bool, cached: bool):
+    # refs = (cache_ref?, w_ref?, out_ref, stage_a, stage_b, sem)
+    i = 0
+    cache_ref = refs[i] if cached else None
+    i += int(cached)
+    w_ref = refs[i] if weighted else None
+    i += int(weighted)
+    out_ref, stage_a, stage_b, sem = refs[i], refs[i + 1], refs[i + 2], refs[i + 3]
+
+    step = pl.program_id(0) * pl.num_programs(1) + pl.program_id(1)
+    nsteps = pl.num_programs(0) * pl.num_programs(1)
+    parity = jax.lax.rem(step, 2)
+    fill_kw = dict(R=R, K=K, H=H, block_b=block_b)
+    drain_kw = dict(R=R, H=H, block_b=block_b)
+
+    # warm-up: the very first step stages its own rows
+    @pl.when(step == 0)
+    def warmup():
+        _fill_stage(stage_a, sem.at[0], idx_ref, pool_ref, cache_ref, **fill_kw)
+
+    # prefetch step i+1's rows into the other buffer while this step reduces
+    @pl.when((step + 1 < nsteps) & (parity == 0))
+    def prefetch_into_b():
+        _fill_stage(stage_b, sem.at[1], nxt_ref, pool_ref, cache_ref, **fill_kw)
+
+    @pl.when((step + 1 < nsteps) & (parity == 1))
+    def prefetch_into_a():
+        _fill_stage(stage_a, sem.at[0], nxt_ref, pool_ref, cache_ref, **fill_kw)
+
+    def reduce_from(stage_ref):
+        rows = stage_ref[...].astype(jnp.float32)      # (block_b, H, D)
+        if weighted:
+            rows = rows * w_ref[:, 0, :][..., None]    # (block_b, H, 1)
+        if combiner == "max":
+            res = jnp.max(rows, axis=1)
+        else:
+            res = jnp.sum(rows, axis=1)
+            if combiner == "mean":
+                res = res / H
+        out_ref[...] = res[:, None, :].astype(out_ref.dtype)
+
+    @pl.when(parity == 0)
+    def consume_a():
+        _drain_stage(stage_a, sem.at[0], idx_ref, pool_ref, cached, **drain_kw)
+        reduce_from(stage_a)
+
+    @pl.when(parity == 1)
+    def consume_b():
+        _drain_stage(stage_b, sem.at[1], idx_ref, pool_ref, cached, **drain_kw)
+        reduce_from(stage_b)
+
+
+def _pallas_forward(pool, enc_idx, weights, cache, *, B, T, H, combiner,
+                    block_b, interpret):
     R, D = pool.shape
+    K = 0 if cache is None else cache.shape[0]
     nb = pl.cdiv(B, block_b)
+    nsteps = nb * T
+    # pad the batch to whole blocks: encoded index 0 is a harmless cold DMA
+    # of pool row 0, so no grid step ever sees unspecified block padding
+    B_pad = nb * block_b
+    enc_idx = enc_idx.reshape(B, T, H)
+    if B_pad != B:
+        enc_idx = jnp.pad(enc_idx, ((0, B_pad - B), (0, 0), (0, 0)))
+        if weights is not None:
+            weights = jnp.pad(weights.reshape(B, T, H),
+                              ((0, B_pad - B), (0, 0), (0, 0)))
+
+    def nxt_map(bb, t):
+        # look-ahead SMEM block: the (bb, t) step receives step bb*T+t+1's
+        # index slice so it can prefetch into the idle staging buffer
+        lin = jnp.minimum(bb * T + t + 1, nsteps - 1)
+        return (lin // T, jax.lax.rem(lin, T), 0)
+
     kernel = functools.partial(
-        _fused_kernel, R=R, H=H, block_b=block_b, combiner=combiner,
-        weighted=weights is not None)
+        _fused_kernel, R=R, K=max(K, 1), H=H, block_b=block_b,
+        combiner=combiner, weighted=weights is not None, cached=K > 0)
     in_specs = [
-        # per-step (block_b, 1, H) index slice staged to SMEM — the full
-        # index tensor never has to fit on-chip
+        # per-step (block_b, 1, H) encoded-index slices staged to SMEM — the
+        # full index tensor never has to fit on-chip
         pl.BlockSpec((block_b, 1, H), lambda bb, t: (bb, t, 0),
                      memory_space=pltpu.SMEM),
+        pl.BlockSpec((block_b, 1, H), nxt_map, memory_space=pltpu.SMEM),
         pl.BlockSpec(memory_space=pltpu.ANY),        # pool (manual DMA)
     ]
-    args = (flat_idx.reshape(B, T, H), pool)
+    args = [enc_idx, enc_idx, pool]
+    if K > 0:
+        # constant index map -> fetched once, VMEM-resident across the grid
+        in_specs.append(pl.BlockSpec((K, D), lambda bb, t: (0, 0)))
+        args.append(cache)
     if weights is not None:
         in_specs.append(
             pl.BlockSpec((block_b, 1, H), lambda bb, t: (bb, t, 0)))
-        args = args + (weights.reshape(B, T, H),)
-    return pl.pallas_call(
+        args.append(weights.reshape(B_pad, T, H))
+    out = pl.pallas_call(
         kernel,
         grid=(nb, T),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, 1, D), lambda bb, t: (bb, t, 0)),
         scratch_shapes=[
             pltpu.VMEM((block_b, H, D), pool.dtype),
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((block_b, H, D), pool.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
-        out_shape=jax.ShapeDtypeStruct((B, T, D), pool.dtype),
+        out_shape=jax.ShapeDtypeStruct((B_pad, T, D), pool.dtype),
         interpret=interpret,
     )(*args)
+    return out[:B] if B_pad != B else out
 
 
 # ---------------------------------------------------------------------------
@@ -155,11 +296,28 @@ def _xla_forward(pool, flat_idx, weights, *, B, T, H, combiner):
 # ---------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _fused(pool, flat_idx, weights, meta):
-    combiner, B, T, H, method, block_b = meta
+    combiner, B, T, H, method, block_b, hot = meta
     if method in ("pallas", "interpret"):
-        return _pallas_forward(pool, flat_idx, weights, B=B, T=T, H=H,
+        if hot is not None:
+            offsets, table_hot = hot
+            # the cache is sliced from `pool` *inside* the VJP-wrapped
+            # forward, so gradients through cached rows flow to the pool
+            # exactly like uncached ones (global ids are preserved)
+            cache = jnp.concatenate([
+                jax.lax.slice_in_dim(pool, o, o + k)
+                for o, k in zip(offsets, table_hot) if k > 0])
+            enc, _ = encode_hot_indices(flat_idx.reshape(B, T, H),
+                                        offsets, table_hot)
+        else:
+            cache = None
+            enc = flat_idx.reshape(B, T, H)
+        return _pallas_forward(pool, enc, weights, cache, B=B, T=T, H=H,
                                combiner=combiner, block_b=block_b,
                                interpret=(method == "interpret"))
+    # XLA path: under frequency-packed placement the hot prefixes are already
+    # contiguous in the pool and stay hardware-cache-resident; a separate
+    # cache gather would only add traffic, so the plain fused take IS the
+    # cached path here (bit-identical by construction).
     return _xla_forward(pool, flat_idx, weights, B=B, T=T, H=H,
                         combiner=combiner)
 
@@ -169,7 +327,7 @@ def _fused_fwd(pool, flat_idx, weights, meta):
 
 
 def _fused_bwd(meta, res, g):
-    combiner, B, T, H, method, block_b = meta
+    combiner, B, T, H, method, block_b, hot = meta
     pool, flat_idx, weights = res
     R, D = pool.shape
     g = g.astype(jnp.float32)                              # (B, T, D)
@@ -219,20 +377,26 @@ def fused_embedding_bag(pool: jnp.ndarray, indices: jnp.ndarray,
                         weights: Optional[jnp.ndarray] = None, *,
                         offsets: Optional[Sequence[int]] = None,
                         combiner: str = "sum", method: str = "xla",
-                        block_b: int = 8) -> jnp.ndarray:
+                        block_b: int = 8,
+                        table_hot: Optional[Sequence[int]] = None) -> jnp.ndarray:
     """Pool per-table embedding bags for all tables in one fused call.
 
     Args:
-      pool:     (R, D) row-concatenation of every table.
-      indices:  (B, T, H) per-table-local (or, with ``offsets=None``, global)
-                int rows; T tables, H lookups ("hot") per bag.
-      weights:  optional (B, T, H) per-lookup scalars, applied before the
-                combiner (so weighted mean/max match the unfused oracle).
-      offsets:  static per-table row offsets into ``pool``; ``None`` means
-                indices are already global pool rows.
-      combiner: "sum" | "mean" | "max".
-      method:   "xla" (one take + reduce), "pallas", or "interpret".
-      block_b:  batch rows per Pallas grid step.
+      pool:      (R, D) row-concatenation of every table.
+      indices:   (B, T, H) per-table-local (or, with ``offsets=None``, global)
+                 int rows; T tables, H lookups ("hot" axis) per bag.
+      weights:   optional (B, T, H) per-lookup scalars, applied before the
+                 combiner (so weighted mean/max match the unfused oracle).
+      offsets:   static per-table row offsets into ``pool``; ``None`` means
+                 indices are already global pool rows.
+      combiner:  "sum" | "mean" | "max".
+      method:    "xla" (one take + reduce), "pallas", or "interpret".
+      block_b:   batch rows per Pallas grid step.
+      table_hot: optional per-table counts of frequency-packed hot rows — the
+                 leading ``table_hot[t]`` local rows of table ``t`` are served
+                 from the VMEM-resident hot-row cache on the Pallas path
+                 instead of an HBM DMA. Requires ``offsets`` when ``T > 1``.
+                 Numerics are identical with or without it.
 
     Returns (B, T, D); gradients flow to ``pool`` (sparse scatter-add via
     ``segment_sum``) and ``weights``.
@@ -245,7 +409,17 @@ def fused_embedding_bag(pool: jnp.ndarray, indices: jnp.ndarray,
         off = jnp.asarray(offsets, jnp.int32)
         assert off.shape == (T,), (off.shape, T)
         idx = idx + off[None, :, None]
+    hot = None
+    if table_hot is not None:
+        table_hot = tuple(int(k) for k in table_hot)
+        assert len(table_hot) == T, (len(table_hot), T)
+        if sum(table_hot) > 0:
+            offs = tuple(int(o) for o in offsets) if offsets is not None \
+                else (0,) * T
+            assert offsets is not None or T == 1, \
+                "table_hot with T > 1 requires offsets"
+            hot = (offs, table_hot)
     flat_idx = idx.reshape(-1)
     w = None if weights is None else weights.astype(jnp.float32)
-    meta = (combiner, B, T, H, method, max(1, min(block_b, B)))
+    meta = (combiner, B, T, H, method, max(1, min(block_b, B)), hot)
     return _fused(pool, flat_idx, w, meta)

@@ -11,10 +11,6 @@ Set globally via ``set_default_impl`` or per-call with ``impl=``.
 from __future__ import annotations
 
 import os
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
 
 from repro.models import attention as _xla_attn
 
@@ -57,19 +53,22 @@ def decode_attention(q, k_cache, v_cache, cache_pos, pos, *, window=None,
 
 
 def fused_embedding_bag(pool, indices, weights=None, *, offsets=None,
-                        combiner="sum", impl=None, block_b=8):
+                        combiner="sum", impl=None, block_b=8,
+                        table_hot=None):
     """Multi-table fused embedding engine (one call for all tables).
 
     pool (R, D) row-concatenated tables; indices (B, T, H) per-table-local
     rows (``offsets`` = static per-table row offsets, None if already
-    global); weights (B, T, H)? -> (B, T, D). All impls share a custom VJP
-    whose backward scatter-adds sparse table gradients via ``segment_sum``.
+    global); weights (B, T, H)? -> (B, T, D). ``table_hot`` = per-table
+    counts of frequency-packed hot leading rows served from the VMEM hot-row
+    cache on the Pallas path. All impls share a custom VJP whose backward
+    scatter-adds sparse table gradients via ``segment_sum``.
     """
     impl = impl or _DEFAULT_IMPL
     from repro.kernels import fused_embedding as fe
     return fe.fused_embedding_bag(
         pool, indices, weights, offsets=offsets, combiner=combiner,
-        method=impl, block_b=block_b)
+        method=impl, block_b=block_b, table_hot=table_hot)
 
 
 def embedding_bag(table, indices, weights=None, *, combiner="sum", impl=None):

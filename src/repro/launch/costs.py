@@ -12,15 +12,14 @@ parse (per-execution) remains in dryrun records as a structural cross-check.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional
+from typing import Dict
 
 import jax
 import numpy as np
 from jax import core as jcore
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models.common import pad_vocab, pattern_split
+from repro.models.common import pad_vocab
 from repro.sharding.policy import ShardingPolicy
 
 
@@ -174,7 +173,6 @@ def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig,
     d_data = _axis_size(policy, "fsdp")
     d_model = _axis_size(policy, "tp")
     d_batch = _axis_size(policy, "batch")
-    n_dev = policy.mesh.size if policy.mesh is not None else 1
     B, S = shape.global_batch, shape.seq_len
     dt = 2.0
     out: Dict[str, float] = {}

@@ -9,13 +9,11 @@ Shapes: q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D); GQA via Hq = Hkv * group.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.sharding.policy import constrain
 
 NEG_INF = -1e30
 

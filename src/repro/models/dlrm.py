@@ -72,7 +72,6 @@ def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
         "tables": ("vocab", None),      # pooled rows over the PS/model axis
         "mlp": {},
     }
-    prev = cfg.n_dense + cfg.n_tables * cfg.embed_dim
     for li, h in enumerate(cfg.mlp_dims):
         specs["mlp"][f"w{li}"] = (None, None)
         specs["mlp"][f"b{li}"] = (None,)
@@ -90,11 +89,11 @@ def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
     return specs
 
 
-def _field_embeddings(params, batch, cfg: DLRMConfig):
+def _field_embeddings(params, batch, cfg: DLRMConfig, table_hot=None):
     """All per-field embeddings in ONE fused call. -> (B, n_tables, D)."""
     return ops.fused_embedding_bag(
         params["tables"], batch["sparse"], offsets=cfg.table_offsets,
-        combiner=cfg.pooling)
+        combiner=cfg.pooling, table_hot=table_hot)
 
 
 def _deep_mlp(params, x, cfg: DLRMConfig):
@@ -104,9 +103,17 @@ def _deep_mlp(params, x, cfg: DLRMConfig):
     return (h @ params["mlp"]["w_out"] + params["mlp"]["b_out"])[:, 0]
 
 
-def dlrm_forward(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
-    """batch: {dense (B,n_dense) f32, sparse (B,m,hot) i32} -> logit (B,)."""
-    emb = _field_embeddings(params, batch, cfg)             # (B, m, D)
+def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
+    """batch: {dense (B,n_dense) f32, sparse (B,m,hot) i32} -> logit (B,).
+
+    ``table_hot`` overrides the per-table hot-row cache prefixes for the
+    fused embedding engine (defaults to ``cfg.table_hot``, i.e. the
+    ``cfg.hot_rows_k`` budget split across tables; frequency-aware jobs pass
+    a measured plan from ``ParameterPlacementService.hot_plan``).
+    """
+    if table_hot is None:
+        table_hot = cfg.table_hot
+    emb = _field_embeddings(params, batch, cfg, table_hot)  # (B, m, D)
     emb = constrain(emb, ("batch", None, None))
     B = emb.shape[0]
     x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
@@ -115,7 +122,7 @@ def dlrm_forward(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
         deep = _deep_mlp(params, x0, cfg)
         wide_emb = ops.fused_embedding_bag(
             params["wide"], batch["sparse"], offsets=cfg.table_offsets,
-            combiner="sum")                                  # (B, m, 1)
+            combiner="sum", table_hot=table_hot)             # (B, m, 1)
         wide = batch["dense"] @ params["wide_dense"] + jnp.sum(
             wide_emb[..., 0], axis=1)
         return deep + wide

@@ -209,7 +209,6 @@ def decode_step_encdec(params, cache, tokens, cfg: ModelConfig):
 
     x = params["embed"][tokens].astype(dt)
     x = x + sinusoid_positions(1, cfg.d_model, offset=step).astype(dt)
-    pos_tree = {"global": new_cache["pos"]}
 
     def body(x, xs):
         lp, sk, sv, ck, cv = xs

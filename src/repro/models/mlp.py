@@ -1,7 +1,7 @@
 """Dense MLP and MoE blocks (sort-based, capacity-bounded expert dispatch)."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ methods are pure functions of pytrees, safe to ``jax.jit``/``pjit``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

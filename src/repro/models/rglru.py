@@ -9,7 +9,6 @@ the O(1) recurrent update. [arXiv:2402.19427]
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

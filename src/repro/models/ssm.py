@@ -6,7 +6,6 @@ Follows the minimal SSD reference of arXiv:2405.21060 §6.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

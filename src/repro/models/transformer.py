@@ -7,8 +7,7 @@ the lowered HLO stays O(pattern) instead of O(num_layers). Remainder layers
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.models import mlp as mlp_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
 from repro.models.common import (
-    KeyGen, act_fn, apply_rope, dense_init, dtype_of, pad_vocab, pattern_split,
+    KeyGen, apply_rope, dense_init, dtype_of, pad_vocab, pattern_split,
     rms_norm,
 )
 from repro.sharding.policy import constrain

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,9 +18,10 @@ from __future__ import annotations
 import contextlib
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -187,3 +188,89 @@ def make_policy(mesh: Optional[Mesh], cfg: ModelConfig, shape: ShapeConfig,
     if overrides:
         rules.update(overrides)
     return ShardingPolicy(mesh=mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Frequency-aware pooled-row placement (RecShard-style, feeds the fused
+# embedding engine's hot-row cache and the PS row-range assignment)
+# ---------------------------------------------------------------------------
+def pack_hot_ranges(counts: np.ndarray, table_rows: Sequence[int],
+                    budget: int) -> Tuple[int, ...]:
+    """Per-table hot-prefix sizes from pooled row-access counts.
+
+    Picks the globally most-frequent ``budget`` rows and returns how many of
+    them land in each table — the ``table_hot`` argument of the fused
+    embedding engine. Assumes rows are frequency-packed within each table
+    (hot ids lead; see ``frequency_permutation`` for hashed layouts), so the
+    returned prefix of table ``t`` covers exactly its selected hot rows.
+    """
+    counts = np.asarray(counts)
+    table_rows = tuple(int(r) for r in table_rows)
+    assert counts.shape == (sum(table_rows),), (counts.shape, sum(table_rows))
+    budget = min(int(budget), counts.size)
+    if budget <= 0:
+        return (0,) * len(table_rows)
+    top = np.argpartition(counts, -budget)[-budget:]
+    top = top[counts[top] > 0]              # never cache rows never touched
+    bounds = np.cumsum((0,) + table_rows)
+    per_table = np.histogram(top, bins=bounds)[0]
+    return tuple(int(k) for k in per_table)
+
+
+def frequency_permutation(counts: np.ndarray,
+                          table_rows: Sequence[int]) -> np.ndarray:
+    """Per-table remap old-local-id -> frequency rank (hot rows first).
+
+    ``perm[global_row] = new_global_row`` keeps every row inside its own
+    table but reorders each table by descending access count, producing the
+    frequency-packed layout `pack_hot_ranges` and the hot-row cache assume.
+    Apply it to the pool rows once at (re)build time and to incoming ids at
+    ingestion — the remap itself never sits on the training hot path.
+    """
+    counts = np.asarray(counts)
+    perm = np.empty((counts.size,), np.int64)
+    off = 0
+    for rows in table_rows:
+        rows = int(rows)
+        order = np.argsort(-counts[off:off + rows], kind="stable")
+        perm[off + order] = off + np.arange(rows)
+        off += rows
+    return perm
+
+
+def balanced_vocab_ranges(counts: np.ndarray,
+                          n_shards: int) -> List[Tuple[int, int]]:
+    """Contiguous pooled-row ranges with ~equal access mass per PS shard.
+
+    Replaces uniform row striping over the "vocab" axis: a uniform split
+    sends nearly all the skewed traffic to whichever shard holds the hot
+    head, while equal-mass boundaries (inverse-CDF of the access histogram)
+    keep per-PS lookup load balanced — the paper's hot-PS mitigation, applied
+    at placement time instead of after the fact.
+    """
+    counts = np.asarray(counts, np.float64)
+    n_shards = max(1, int(n_shards))
+    total = counts.sum()
+    if total <= 0:                           # no signal: uniform striping
+        edges = np.linspace(0, counts.size, n_shards + 1).astype(np.int64)
+    else:
+        cum = np.cumsum(counts)
+        targets = total * np.arange(1, n_shards) / n_shards
+        idx = np.searchsorted(cum, targets)
+        # the target falls inside row `idx`: put that row on whichever side
+        # leaves the left shard's mass closer to its target
+        left = np.where(idx > 0, cum[np.maximum(idx - 1, 0)], 0.0)
+        inner = np.where(np.abs(left - targets) <= np.abs(cum[idx] - targets),
+                         idx, idx + 1)
+        edges = np.concatenate(([0], inner, [counts.size]))
+        edges = np.maximum.accumulate(np.clip(edges, 0, counts.size))
+    return [(int(edges[i]), int(edges[i + 1])) for i in range(n_shards)]
+
+
+def placement_imbalance(counts: np.ndarray,
+                        ranges: Sequence[Tuple[int, int]]) -> float:
+    """max/mean per-shard access mass (1.0 = perfectly balanced)."""
+    counts = np.asarray(counts, np.float64)
+    loads = np.array([counts[s:e].sum() for s, e in ranges])
+    mean = loads.mean()
+    return float(loads.max() / mean) if mean > 0 else 1.0

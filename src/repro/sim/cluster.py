@@ -16,10 +16,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.migration import MigrationPlan, MigrationTimings
+from repro.core.migration import MigrationTimings
 from repro.core.oom import OOMPredictor
 from repro.core.perf_model import JobResources, feature_vector
-from repro.sim.schedulers import JobRuntimeView, Scheduler, make_scheduler
+from repro.sim.schedulers import JobRuntimeView, make_scheduler
 from repro.sim.workload import SimJob
 
 TIMINGS = MigrationTimings()

@@ -8,8 +8,8 @@ matching Fig 1(b) (≈2.3 TB / 15 h at production scale, scaled down here).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -10,9 +10,8 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.core.flash_checkpoint import FlashCheckpoint
 from repro.models.registry import ModelAPI
 from repro.sharding.policy import ShardingPolicy, logical_spec, make_policy

@@ -8,7 +8,6 @@ halve cross-pod all-reduce bytes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,5 +1,4 @@
 """Analytic collective/HBM models: structural invariants (single-device)."""
-import jax
 import pytest
 
 from repro.configs.base import SHAPES

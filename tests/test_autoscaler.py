@@ -2,9 +2,9 @@
 import numpy as np
 
 from repro.core.autoscaler import (
-    MAX_JOB_CPU, ClusterCapacity, JobState, PlanCandidate, Prices,
-    dlrover_rm_scaler, generate_candidates, get_scaler, list_scalers,
-    register_scaler, resource_cost, weight_wg, weighted_greedy_select,
+    MAX_JOB_CPU, ClusterCapacity, JobState, Prices, generate_candidates,
+    get_scaler, list_scalers, register_scaler, resource_cost, weight_wg,
+    weighted_greedy_select,
 )
 from repro.core.perf_model import JobResources, JobStatics, PerfModel, \
     synthesize_t_iter

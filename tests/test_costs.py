@@ -3,11 +3,10 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import reduce_config
 from repro.configs.registry import ARCHS
-from repro.launch.costs import count_jaxpr_flops, flops_of
+from repro.launch.costs import flops_of
 from repro.models.registry import build_model
 from repro.train import optim, trainer
 

@@ -9,7 +9,6 @@ Covers the acceptance contract of the fused engine:
     for the wide part in wide_deep), independent of n_tables.
   * legacy single-table embedding_bag honours combiner when weights are given.
 """
-import functools
 
 import jax
 import jax.numpy as jnp

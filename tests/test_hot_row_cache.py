@@ -1,0 +1,314 @@
+"""Hot-row cache + double-buffered fused embedding engine: correctness.
+
+Covers the acceptance contract of the skew-aware engine:
+  * fused+cache output BIT-matches the XLA fallback on uniform and zipfian
+    index streams, for all three combiners, weighted and unweighted, on the
+    double-buffered interpret kernel (the TPU code path's numerics).
+  * gradients flow through cached rows exactly as through uncached ones
+    (global ids are preserved; the segment_sum backward is shared).
+  * the frequency estimator, RecShard-style placement planners, and the
+    job-master placement service agree with brute-force oracles.
+  * DLRM threads ``cfg.hot_rows_k`` / ``table_hot`` down to the fused call
+    without changing numerics.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.dlrm_models import WIDE_DEEP, reduced_dlrm
+from repro.core.sharding_service import ParameterPlacementService
+from repro.data.synthetic import (RowFreqCounter, criteo_batch,
+                                  estimate_row_freq, zipf_indices)
+from repro.kernels import ops, ref
+from repro.kernels.fused_embedding import (cache_slot_offsets,
+                                           encode_hot_indices,
+                                           fused_embedding_bag, hot_row_ids,
+                                           table_offsets)
+from repro.models import dlrm
+from repro.sharding.policy import (balanced_vocab_ranges,
+                                   frequency_permutation, pack_hot_ranges,
+                                   placement_imbalance)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROWS_PER_TABLE = (64, 40, 96, 24)
+OFFSETS = table_offsets(ROWS_PER_TABLE)
+TABLE_HOT = (16, 8, 24, 6)
+
+
+def _stream(B=13, H=4, D=16, seed=0, alpha=0.0):
+    """Pool + (B, T, H) local indices; zipfian when alpha > 0."""
+    rng = np.random.default_rng(seed)
+    T = len(ROWS_PER_TABLE)
+    pool = jnp.asarray(rng.standard_normal((sum(ROWS_PER_TABLE), D),
+                                           np.float32))
+    idx = np.stack([zipf_indices(rng, rows, (B, H), alpha)
+                    for rows in ROWS_PER_TABLE], axis=1)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, (B, T, H)).astype(np.float32))
+    return pool, jnp.asarray(idx.astype(np.int32)), w
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness of the cached, double-buffered kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("combiner", ["sum", "mean", "max"])
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("alpha", [0.0, 1.05])
+def test_cache_bitmatches_xla_fallback(combiner, weighted, alpha):
+    pool, idx, w = _stream(alpha=alpha)
+    weights = w if weighted else None
+    out_c = fused_embedding_bag(pool, idx, weights, offsets=OFFSETS,
+                                combiner=combiner, method="interpret",
+                                block_b=4, table_hot=TABLE_HOT)
+    out_x = fused_embedding_bag(pool, idx, weights, offsets=OFFSETS,
+                                combiner=combiner, method="xla")
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_x))
+
+
+def test_cache_off_equals_cache_on_interpret():
+    """The cache only re-routes reads: outputs are bit-identical."""
+    pool, idx, _ = _stream(alpha=1.05)
+    out_nc = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                 method="interpret", block_b=4)
+    out_c = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                method="interpret", block_b=4,
+                                table_hot=TABLE_HOT)
+    np.testing.assert_array_equal(np.asarray(out_nc), np.asarray(out_c))
+
+
+def test_cache_partial_tail_block():
+    """B not divisible by block_b: host-side padding covers the tail."""
+    pool, idx, _ = _stream(B=11, alpha=1.05)
+    out_c = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                method="interpret", block_b=4,
+                                table_hot=TABLE_HOT)
+    out_x = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                method="xla")
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_x))
+
+
+def test_all_hot_and_none_hot_extremes():
+    pool, idx, _ = _stream(alpha=1.05)
+    all_hot = ROWS_PER_TABLE            # whole pool cached
+    none_hot = (0,) * len(ROWS_PER_TABLE)
+    out_x = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                method="xla")
+    for hot in (all_hot, none_hot):
+        out = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                  method="interpret", block_b=4,
+                                  table_hot=hot)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out_x))
+
+
+@pytest.mark.parametrize("combiner", ["sum", "mean", "max"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_grads_through_cached_rows(combiner, weighted):
+    """Cached rows keep their global ids: pool/weight grads match the
+    plain-autodiff oracle AND the uncached engine exactly."""
+    pool, idx, w = _stream(alpha=1.05)
+    weights = w if weighted else None
+
+    def loss(method, hot):
+        def f(p, wt):
+            out = fused_embedding_bag(p, idx, wt, offsets=OFFSETS,
+                                      combiner=combiner, method=method,
+                                      block_b=4, table_hot=hot)
+            return jnp.sum(jnp.sin(out))
+        return f
+
+    def loss_ref(p, wt):
+        out = ref.fused_embedding_bag_ref(p, idx, wt, offsets=OFFSETS,
+                                          combiner=combiner)
+        return jnp.sum(jnp.sin(out))
+
+    args = (pool, weights)
+    gp_c, gw_c = jax.grad(loss("interpret", TABLE_HOT), argnums=(0, 1))(*args)
+    gp_n, gw_n = jax.grad(loss("interpret", None), argnums=(0, 1))(*args)
+    gp_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(*args)
+    np.testing.assert_array_equal(np.asarray(gp_c), np.asarray(gp_n))
+    np.testing.assert_allclose(np.asarray(gp_c), np.asarray(gp_r),
+                               atol=1e-5, rtol=1e-5)
+    if weighted:
+        np.testing.assert_array_equal(np.asarray(gw_c), np.asarray(gw_n))
+        np.testing.assert_allclose(np.asarray(gw_c), np.asarray(gw_r),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_encode_hot_indices():
+    idx = jnp.asarray(np.array([[[0, 15], [7, 8]]]), jnp.int32)  # (1, 2, 2)
+    offs, hot = (0, 100), (16, 8)
+    gidx = idx + jnp.asarray(offs, jnp.int32)[None, :, None]
+    enc, hit = encode_hot_indices(gidx, offs, hot)
+    # table 0: both local ids < 16 -> cache slots 0 and 15
+    # table 1: local 7 < 8 -> slot 16+7; local 8 >= 8 -> cold global row 108
+    np.testing.assert_array_equal(np.asarray(enc)[0, 0], [-1, -16])
+    np.testing.assert_array_equal(np.asarray(enc)[0, 1], [-(16 + 7) - 1, 108])
+    np.testing.assert_array_equal(np.asarray(hit)[0], [[True, True],
+                                                       [True, False]])
+    assert cache_slot_offsets(hot) == (0, 16)
+    np.testing.assert_array_equal(
+        hot_row_ids(offs, hot),
+        np.concatenate([np.arange(16), 100 + np.arange(8)]))
+
+
+def test_xla_path_ignores_cache_bit_identically():
+    pool, idx, _ = _stream(alpha=1.05)
+    out_a = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                method="xla")
+    out_b = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
+                                method="xla", table_hot=TABLE_HOT)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+
+
+# ---------------------------------------------------------------------------
+# frequency estimation + placement planning
+# ---------------------------------------------------------------------------
+def test_zipf_indices_skewed_and_bounded():
+    rng = np.random.default_rng(0)
+    ids = zipf_indices(rng, 1000, 20_000, 1.05)
+    assert ids.min() >= 0 and ids.max() < 1000
+    counts = np.bincount(ids, minlength=1000)
+    assert counts[0] == counts.max()          # rank 0 is the hottest row
+    assert counts[:10].sum() > 5 * counts[500:510].sum()
+    uni = zipf_indices(rng, 1000, 20_000, 0.0)
+    assert np.bincount(uni, minlength=1000).max() < counts[0]
+
+
+def test_row_freq_counter_exact():
+    ctr = RowFreqCounter((4, 6))
+    sparse = np.array([[[0, 0], [5, 1]], [[3, 0], [5, 5]]])   # (2, 2, 2)
+    ctr.update(sparse)
+    expect = np.zeros(10, np.int64)
+    for g in [0, 0, 4 + 5, 4 + 1, 3, 0, 4 + 5, 4 + 5]:
+        expect[g] += 1
+    np.testing.assert_array_equal(ctr.counts, expect)
+    assert ctr.n_lookups == 8
+    assert ctr.top_k(1).tolist() == [9]       # global row 9 seen 3x
+    assert ctr.hit_rate((1, 0)) == pytest.approx(3 / 8)   # row 0 hits
+    assert ctr.hit_rate((4, 6)) == pytest.approx(1.0)
+
+
+def test_pack_hot_ranges_budget_and_zero_rows():
+    counts = np.array([9, 7, 1, 0, 8, 6, 0, 0])
+    plan = pack_hot_ranges(counts, (4, 4), 4)
+    assert plan == (2, 2)                     # rows 0,1 and 4,5 are hottest
+    assert pack_hot_ranges(counts, (4, 4), 0) == (0, 0)
+    # never caches rows that were never touched, even with a huge budget
+    plan_all = pack_hot_ranges(counts, (4, 4), 8)
+    assert plan_all == (3, 2)
+
+
+def test_balanced_ranges_beat_uniform_striping():
+    cfg = dataclasses.replace(reduced_dlrm(WIDE_DEEP),
+                              table_rows=(256,) * 6, zipf_alpha=1.05)
+    ctr = estimate_row_freq(cfg, seed=3, n_samples=512, batch_size=128)
+    n_ps = 4
+    balanced = balanced_vocab_ranges(ctr.counts, n_ps)
+    uniform = [(i * ctr.total_rows // n_ps, (i + 1) * ctr.total_rows // n_ps)
+               for i in range(n_ps)]
+    # contiguous, exhaustive, non-overlapping cover of the pool
+    assert balanced[0][0] == 0 and balanced[-1][1] == ctr.total_rows
+    for (a, b), (c, d) in zip(balanced, balanced[1:]):
+        assert b == c
+    imb_b = placement_imbalance(ctr.counts, balanced)
+    imb_u = placement_imbalance(ctr.counts, uniform)
+    assert imb_b < imb_u
+    assert imb_b < 1.35
+
+
+def test_balanced_ranges_no_spurious_empty_shard():
+    # the target-crossing row goes to whichever side balances better
+    ranges = balanced_vocab_ranges(np.array([4, 6]), 2)
+    assert ranges == [(0, 1), (1, 2)]
+    # one dominant row: its shard is inherently heavy, but the other rows
+    # must not be dragged along with it leaving an empty shard
+    ranges = balanced_vocab_ranges(np.array([1, 1, 1, 1, 100]), 2)
+    assert ranges == [(0, 4), (4, 5)]
+
+
+def test_table_hot_respects_budget():
+    cfg = dataclasses.replace(reduced_dlrm(WIDE_DEEP), hot_rows_k=3)
+    assert cfg.n_tables == 6
+    assert sum(cfg.table_hot) == 3            # never exceeds the VMEM budget
+    cfg = dataclasses.replace(cfg, hot_rows_k=20)
+    assert cfg.table_hot == (4, 4, 3, 3, 3, 3)
+    cfg = dataclasses.replace(cfg, hot_rows_k=10 ** 6)
+    assert cfg.table_hot == cfg.table_rows    # clipped to the tables
+
+
+def test_frequency_permutation_packs_hot_rows():
+    counts = np.array([1, 9, 3, 0, 2, 8])
+    perm = frequency_permutation(counts, (3, 3))
+    assert sorted(perm.tolist()) == list(range(6))
+    # each table keeps its own rows; hottest old row maps to local rank 0
+    assert perm[1] == 0 and perm[2] == 1 and perm[0] == 2
+    assert perm[5] == 3 and perm[4] == 4 and perm[3] == 5
+    packed = np.zeros(6, counts.dtype)
+    packed[perm] = counts
+    assert list(packed[:3]) == sorted(counts[:3], reverse=True)
+    assert list(packed[3:]) == sorted(counts[3:], reverse=True)
+
+
+def test_parameter_placement_service():
+    svc = ParameterPlacementService((8, 8))
+    svc.report_batch("w0", np.array([[[0, 1], [2, 2]]]))      # (1, 2, 2)
+    svc.report_counts("w1", np.eye(16, dtype=np.int64)[3])    # one hit row 3
+    counts = svc.counts
+    assert counts[0] == 1 and counts[1] == 1 and counts[3] == 1
+    assert counts[8 + 2] == 2 and counts.sum() == 5
+    assert svc.hot_plan(1) == (0, 1)          # global row 10 is hottest
+    ranges = svc.ps_ranges(2)
+    assert ranges[0][0] == 0 and ranges[-1][1] == 16
+    assert svc.imbalance(2) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# DLRM plumbing: cfg budget -> fused call, numerics unchanged
+# ---------------------------------------------------------------------------
+def test_dlrm_threads_table_hot(monkeypatch):
+    cfg = dataclasses.replace(reduced_dlrm(WIDE_DEEP), zipf_alpha=1.05,
+                              hot_rows_k=24)
+    assert cfg.table_hot == (4,) * cfg.n_tables
+    params = dlrm.init_dlrm(cfg, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v)
+             for k, v in criteo_batch(cfg, 7, np.arange(8)).items()}
+
+    seen = []
+    real = ops.fused_embedding_bag
+
+    def spy(*args, **kwargs):
+        seen.append(kwargs.get("table_hot"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "fused_embedding_bag", spy)
+    logit_hot = dlrm.dlrm_forward(params, batch, cfg)
+    assert seen == [cfg.table_hot, cfg.table_hot]   # deep + wide calls
+    cfg_off = dataclasses.replace(cfg, hot_rows_k=0)
+    logit_off = dlrm.dlrm_forward(params, batch, cfg_off)
+    np.testing.assert_array_equal(np.asarray(logit_hot),
+                                  np.asarray(logit_off))
+    # a measured plan can override the config default
+    seen.clear()
+    plan = (2,) * cfg.n_tables
+    dlrm.dlrm_forward(params, batch, cfg, table_hot=plan)
+    assert seen == [plan, plan]
+
+
+def test_criteo_batch_zipf_plumbing():
+    cfg = dataclasses.replace(reduced_dlrm(WIDE_DEEP),
+                              table_rows=(512,) * 6, zipf_alpha=1.05)
+    b1 = criteo_batch(cfg, 3, np.arange(64))
+    b2 = criteo_batch(cfg, 3, np.arange(64))
+    np.testing.assert_array_equal(b1["sparse"], b2["sparse"])  # deterministic
+    # skew shows up: leading rows dominate
+    ctr = RowFreqCounter(cfg.table_rows)
+    ctr.update(b1["sparse"])
+    assert ctr.hit_rate((16,) * 6) > 0.25
+    # alpha=0 path is byte-identical to the pre-skew generator
+    cfg0 = dataclasses.replace(cfg, zipf_alpha=0.0)
+    b0 = criteo_batch(cfg0, 3, np.arange(4))
+    b0x = criteo_batch(cfg0, 3, np.arange(4), zipf_alpha=0.0)
+    np.testing.assert_array_equal(b0["sparse"], b0x["sparse"])

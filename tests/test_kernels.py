@@ -5,7 +5,6 @@ Sweeps shapes/dtypes with hypothesis; every kernel must match ref.py.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref

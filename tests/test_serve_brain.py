@@ -1,7 +1,6 @@
 """Serving engine + cluster-brain orchestration integration."""
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import reduce_config
 from repro.configs.registry import ARCHS
@@ -69,7 +68,7 @@ def test_brain_three_stage_lifecycle():
     # stage 3: memory growth triggers predictive scale-up
     for i in range(8):
         m.profiler.record_memory(i * 1e5, 4e9 + i * 2e9)
-    scaled = brain.check_oom()
+    brain.check_oom()
     assert m.resources.mem_p >= 16.0
     brain.complete("j0", throughput=1000.0)
     assert len(brain.config_db) == 1

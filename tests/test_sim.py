@@ -1,9 +1,8 @@
 """Cluster-simulator sanity: scheduler ordering, event handling, accounting."""
-import numpy as np
 import pytest
 
 from repro.sim.cluster import CloudSim
-from repro.sim.workload import generate_jobs, oracle_config, true_throughput
+from repro.sim.workload import generate_jobs, true_throughput
 
 
 @pytest.fixture(scope="module")
