@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib-only; the CI docs job runs this).
+
+Scans every tracked ``*.md`` file for inline links/images
+(``[text](target)``) and verifies that relative targets resolve to real
+files or directories. Remote (``http(s)://``, ``mailto:``) and pure-anchor
+(``#...``) targets are only checked syntactically — CI must not depend on
+network reachability.
+
+Usage: python scripts/check_md_links.py [root]
+Exits non-zero listing every broken link as ``file:line: target``.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) / ![alt](target); target ends at the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_INLINE_CODE = re.compile(r"`[^`]*`")
+_SKIP_DIRS = {"__pycache__", ".ruff_cache", ".pytest_cache", "node_modules",
+              "venv", "build", "dist", "site-packages"}
+
+
+def iter_md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        # skip hidden dirs (.git, .venv, ...) and vendored/third-party trees
+        dirnames[:] = [d for d in dirnames
+                       if d not in _SKIP_DIRS and not d.startswith(".")]
+        for name in sorted(filenames):
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(path: str, root: str):
+    """Yield (line_no, target) for every broken relative link in one file."""
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line_no, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+            if in_fence:
+                continue                      # code blocks aren't links
+            line = _INLINE_CODE.sub("", line)  # nor are `inline code` spans
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]  # strip intra-doc anchors
+                if not rel:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    yield line_no, target
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    broken = []
+    n_files = 0
+    for path in iter_md_files(root):
+        n_files += 1
+        for line_no, target in check_file(path, root):
+            broken.append(f"{os.path.relpath(path, root)}:{line_no}: {target}")
+    if broken:
+        print(f"BROKEN LINKS ({len(broken)}):")
+        print("\n".join(broken))
+        return 1
+    print(f"ok: {n_files} markdown files, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,6 +62,8 @@ class FlashCheckpoint:
         t0 = time.perf_counter()
         flat = _flatten(state)
         with self._lock:
+            if step in self._mem:                # re-save: refresh recency,
+                self._mem_order.remove(step)     # never double-count for keep
             self._mem[step] = flat
             self._mem_order.append(step)
             while len(self._mem_order) > self.keep:

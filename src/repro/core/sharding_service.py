@@ -16,6 +16,13 @@ for the fused embedding engine and balanced contiguous PS row ranges instead
 of uniform vocab striping (the paper's hot-PS problem, §2.1/Fig 12, attacked
 at placement time).
 
+``HotTableTracker`` is the *live* evolution of that service: exponentially
+decayed rolling counts that follow drifting access skew, and a hysteresis
+trigger that turns "the current placement has gone hot" into a
+``ReplanDecision`` — the input of ``repro.train.replan``'s mid-job
+re-plan/re-shard cycle (the paper's §4–§5 *dynamic adjustment* loop applied
+to embedding placement).
+
 All methods take an explicit ``now`` timestamp so the service runs identically
 under the simulator's virtual clock and a wall clock.
 """
@@ -88,7 +95,19 @@ class ShardingService:
         return self._workers[worker]
 
     def request_shard(self, worker: str, now: float) -> Optional[Shard]:
-        """Hand the next shard; stragglers receive a split (smaller) shard."""
+        """Hand the next shard; stragglers receive a split (smaller) shard.
+
+        Implements the paper's workload-rebalancing pull model (§5.1): workers
+        fetch on demand, so a slow worker naturally takes fewer samples, and a
+        flagged straggler gets its shard halved (down to ``min_shard``).
+
+        Args:
+          worker: caller's worker id (registered on first contact).
+          now:    current (virtual or wall) time, also counts as a heartbeat.
+
+        Returns the worker's current ``Shard`` (a new one if it held none), or
+        ``None`` when the queue is drained and all epochs are exhausted.
+        """
         with self._lock:
             self._reap_failures(now)
             w = self._view(worker, now)
@@ -115,6 +134,15 @@ class ShardingService:
             return shard
 
     def heartbeat(self, worker: str, progress: int, now: float) -> None:
+        """Record a progress-offset heartbeat (§5.1 liveness + straggler input).
+
+        Args:
+          worker:   reporting worker id.
+          progress: samples processed within the worker's *current* shard
+                    (monotonic within a shard; resets on a new shard).
+          now:      current time; missing heartbeats past
+                    ``heartbeat_timeout`` mark the worker failed.
+        """
         with self._lock:
             w = self._view(worker, now)
             delta = max(0, progress - w.progress)
@@ -123,6 +151,15 @@ class ShardingService:
             w.last_heartbeat = now
 
     def report_done(self, worker: str, shard_index: int, now: float) -> None:
+        """Mark the worker's current shard complete (exactly-once accounting).
+
+        Args:
+          worker:      reporting worker id.
+          shard_index: index of the shard being completed; ignored if it does
+                       not match the shard the worker actually holds (stale
+                       completion after a requeue cannot double-count).
+          now:         current time (counts as a heartbeat).
+        """
         with self._lock:
             w = self._view(worker, now)
             if w.shard is not None and w.shard.index == shard_index:
@@ -154,12 +191,27 @@ class ShardingService:
         return dead
 
     def check_failures(self, now: float) -> List[str]:
+        """Reap workers whose last heartbeat is older than the timeout.
+
+        Their unfinished shards go back to the *front* of the queue (§5.1 "no
+        data omission"). Returns the list of reaped worker ids.
+        """
         with self._lock:
             return self._reap_failures(now)
 
     # ------------------------------------------------------------ stragglers
     def detect_stragglers(self, now: float) -> List[str]:
-        """Progress-offset comparison: rate < ratio × median peer rate."""
+        """Progress-offset comparison: rate < ratio × median peer rate.
+
+        The paper's straggler mitigation (§5.1): flagged workers keep running
+        but receive split shards from ``request_shard``, so one slow pod
+        stops gating the barrier without being evicted.
+
+        Args:
+          now: current time (rates are lifetime samples / lifetime seconds).
+
+        Returns worker ids *newly* flagged as stragglers by this call.
+        """
         with self._lock:
             rates = {}
             for name, w in self._workers.items():
@@ -184,10 +236,12 @@ class ShardingService:
         return self._epoch
 
     def pending_count(self) -> int:
+        """Number of shards waiting in the queue (not held by any worker)."""
         with self._lock:
             return len(self._queue)
 
     def completed_samples(self, epoch: Optional[int] = None) -> int:
+        """Total samples in completed shards (optionally for one epoch)."""
         with self._lock:
             return sum(s.size for s in self._completed
                        if epoch is None or s.epoch == epoch)
@@ -263,10 +317,20 @@ class ParameterPlacementService:
             return self._ctr.counts.copy()
 
     def hot_plan(self, budget: int) -> Tuple[int, ...]:
+        """Per-table hot-prefix sizes for ``budget`` VMEM cache rows.
+
+        The measured ``table_hot`` plan for the fused embedding engine
+        (``pack_hot_ranges`` on the aggregated counts).
+        """
         from repro.sharding.policy import pack_hot_ranges
         return pack_hot_ranges(self.counts, self.table_rows, budget)
 
     def ps_ranges(self, n_ps: int) -> List[Tuple[int, int]]:
+        """Balanced contiguous pooled-row range per PS shard.
+
+        ``balanced_vocab_ranges`` on the aggregated counts — the hot-PS fix
+        of §2.1/Fig 12, applied at placement time.
+        """
         from repro.sharding.policy import balanced_vocab_ranges
         return balanced_vocab_ranges(self.counts, n_ps)
 
@@ -274,3 +338,194 @@ class ParameterPlacementService:
         """max/mean PS load under the current balanced plan (1.0 = ideal)."""
         from repro.sharding.policy import placement_imbalance
         return placement_imbalance(self.counts, self.ps_ranges(n_ps))
+
+
+# ---------------------------------------------------------------------------
+# Live re-planning: decayed rolling counts + hysteresis trigger (paper §4–§5
+# dynamic adjustment applied to embedding placement)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ReplanDecision:
+    """One accepted live re-plan, ready for ``repro.train.replan`` to apply.
+
+    The decision is expressed in the *current* pooled-row layout ("layout
+    space"): ``permutation[row] = new_row`` keeps every row inside its own
+    table but frequency-packs each table (hot rows first), after which
+    ``table_hot`` prefixes feed the fused engine's VMEM cache and
+    ``vocab_ranges`` are the balanced contiguous PS ranges for the new
+    layout. ``imbalance_before``/``after`` are max/mean PS load under the
+    old and new plans — the quantities the Fig 12 hot-PS rows report.
+    """
+    observed_at: int                        # tracker batch count at decision
+    table_hot: Tuple[int, ...]              # per-table hot-prefix sizes
+    vocab_ranges: Tuple[Tuple[int, int], ...]
+    permutation: np.ndarray                 # layout row -> new layout row
+    imbalance_before: float
+    imbalance_after: float
+
+
+class HotTableTracker:
+    """Rolling-count hot/placement tracker with a hysteresis re-plan trigger.
+
+    The static ``ParameterPlacementService`` answers "what is the best plan
+    for everything seen so far"; this tracker answers the live question "has
+    the access distribution drifted far enough from the *applied* plan to be
+    worth a mid-job re-shard". Two mechanisms make that safe to wire into a
+    training loop:
+
+    * **Decayed rolling counts** — every ``observe`` first multiplies the
+      pooled histogram by ``decay``, so the counts are an exponential moving
+      window over recent batches (half-life ``ln 2 / ln(1/decay)`` observes)
+      and track drifting zipf skew instead of averaging it away.
+    * **Hysteresis** — ``maybe_replan`` only fires when (a) the imbalance of
+      the decayed counts under the *currently applied* ranges exceeds
+      ``trigger``, (b) the candidate plan improves it by at least
+      ``min_gain`` (noise near the threshold cannot thrash), (c) at least
+      ``cooldown`` observes have passed since the last applied re-plan, and
+      (d) at least ``min_lookups`` of decayed mass has accumulated.
+
+    The caller applies an accepted decision (permute state, recompile — see
+    ``repro.train.replan``) and then calls ``mark_applied``, which permutes
+    the tracker's own counts into the new layout so observation continues
+    seamlessly in the post-replan id space.
+    """
+
+    def __init__(self, table_rows: Sequence[int], *, n_ps: int = 4,
+                 hot_budget: int = 0, decay: float = 0.9,
+                 trigger: float = 1.2, min_gain: float = 0.05,
+                 cooldown: int = 8, min_lookups: int = 1024,
+                 initial_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+                 initial_hot: Optional[Sequence[int]] = None):
+        """Args:
+          table_rows:  per-table row counts (pooled layout, like the config's
+                       ``table_rows``).
+          n_ps:        PS shard count the vocab ranges are planned for.
+          hot_budget:  total rows of VMEM hot-row cache to plan
+                       (``pack_hot_ranges`` budget; 0 plans no cache).
+          decay:       per-observe multiplier on the rolling counts.
+          trigger:     imbalance (max/mean PS load) that arms a re-plan.
+          min_gain:    minimum imbalance improvement a candidate plan must
+                       deliver (the hysteresis band).
+          cooldown:    minimum observes between applied re-plans.
+          min_lookups: minimum decayed lookup mass before any decision.
+          initial_ranges: the placement plan already in effect — e.g. from a
+                       layout-stamped checkpoint on resume; default = uniform
+                       striping (no plan applied yet).
+          initial_hot: the cache plan already in effect (same provenance).
+        """
+        from repro.kernels.fused_embedding import table_offsets
+        from repro.sharding.policy import uniform_vocab_ranges
+        self.table_rows = tuple(int(r) for r in table_rows)
+        self.offsets = np.asarray(table_offsets(self.table_rows), np.int64)
+        self.total_rows = int(sum(self.table_rows))
+        self.n_ps = int(n_ps)
+        self.hot_budget = int(hot_budget)
+        self.decay = float(decay)
+        self.trigger = float(trigger)
+        self.min_gain = float(min_gain)
+        self.cooldown = int(cooldown)
+        self.min_lookups = float(min_lookups)
+        self._lock = threading.Lock()
+        self.counts = np.zeros((self.total_rows,), np.float64)
+        self._observes = 0
+        self._last_replan = -self.cooldown      # first decision is not gated
+        self.n_replans = 0
+        # the plan currently in effect (default: uniform striping, no cache)
+        self.current_ranges: Tuple[Tuple[int, int], ...] = tuple(
+            (int(s), int(e)) for s, e in (
+                initial_ranges if initial_ranges is not None
+                else uniform_vocab_ranges(self.total_rows, self.n_ps)))
+        self.current_hot: Optional[Tuple[int, ...]] = (
+            None if initial_hot is None
+            else tuple(int(k) for k in initial_hot))
+
+    # ------------------------------------------------------------- observing
+    def observe(self, sparse: np.ndarray) -> None:
+        """Fold one batch of (B, T, H) per-table-local ids into the window.
+
+        Ids are in the *current layout* space — i.e. whatever the training
+        step actually looks up (post-remap after earlier re-plans), which is
+        exactly what workers see and report.
+        """
+        sparse = np.asarray(sparse)
+        flat = (sparse.astype(np.int64)
+                + self.offsets[None, :, None]).reshape(-1)
+        with self._lock:
+            self.counts *= self.decay
+            self.counts += np.bincount(flat, minlength=self.total_rows)
+            self._observes += 1
+
+    def observe_counts(self, delta: np.ndarray) -> None:
+        """Fold a pre-binned pooled count delta (heartbeat payload form)."""
+        delta = np.asarray(delta, np.float64)
+        assert delta.shape == (self.total_rows,), delta.shape
+        with self._lock:
+            self.counts *= self.decay
+            self.counts += delta
+            self._observes += 1
+
+    # -------------------------------------------------------------- queries
+    @property
+    def observes(self) -> int:
+        """Number of batches folded into the rolling window so far."""
+        return self._observes
+
+    def snapshot(self) -> np.ndarray:
+        """Copy of the decayed pooled counts (layout space)."""
+        with self._lock:
+            return self.counts.copy()
+
+    def imbalance(self) -> float:
+        """max/mean PS load of the decayed counts under the APPLIED ranges."""
+        from repro.sharding.policy import placement_imbalance
+        with self._lock:
+            return placement_imbalance(self.counts, self.current_ranges)
+
+    # ------------------------------------------------------------- decisions
+    def maybe_replan(self) -> Optional[ReplanDecision]:
+        """Return a ``ReplanDecision`` if the drift trigger fires, else None.
+
+        Pure planning — nothing is applied; the tracker keeps suggesting the
+        same decision until the caller commits it with ``mark_applied``.
+        """
+        from repro.sharding.policy import (
+            balanced_vocab_ranges, frequency_permutation, pack_hot_ranges,
+            placement_imbalance,
+        )
+        with self._lock:
+            if self._observes - self._last_replan < self.cooldown:
+                return None
+            if self.counts.sum() < self.min_lookups:
+                return None
+            imb_now = placement_imbalance(self.counts, self.current_ranges)
+            if imb_now < self.trigger:
+                return None
+            perm = frequency_permutation(self.counts, self.table_rows)
+            packed = np.empty_like(self.counts)
+            packed[perm] = self.counts
+            ranges = tuple(balanced_vocab_ranges(packed, self.n_ps))
+            imb_after = placement_imbalance(packed, ranges)
+            if imb_now - imb_after < self.min_gain:
+                return None                     # not worth a migration
+            hot = pack_hot_ranges(packed, self.table_rows, self.hot_budget)
+            return ReplanDecision(
+                observed_at=self._observes, table_hot=hot,
+                vocab_ranges=ranges, permutation=perm,
+                imbalance_before=float(imb_now),
+                imbalance_after=float(imb_after))
+
+    def mark_applied(self, decision: ReplanDecision) -> None:
+        """Commit a decision: rotate counts into the new layout, arm cooldown.
+
+        Must be called exactly when the training side has permuted its state
+        and started remapping ids — from then on ``observe`` receives ids in
+        the new layout, and the rolling window is permuted to match.
+        """
+        with self._lock:
+            packed = np.empty_like(self.counts)
+            packed[decision.permutation] = self.counts
+            self.counts = packed
+            self.current_ranges = tuple(decision.vocab_ranges)
+            self.current_hot = tuple(decision.table_hot)
+            self._last_replan = self._observes
+            self.n_replans += 1

@@ -25,7 +25,10 @@ Hot-row cache (skew-aware placement contract)
     trip. On the XLA path the packed prefix *is* the cache — it stays
     hardware-cache-resident by construction, so no extra gather is issued.
     The custom-VJP backward is unchanged either way because global row ids
-    are preserved (the cache only re-routes forward reads).
+    are preserved (the cache only re-routes forward reads). The plan is not
+    frozen for the job's lifetime: when access skew drifts, the live
+    re-planner (``repro.train.replan``) re-packs the pool and recompiles
+    with a fresh ``table_hot`` — any plan computes identical numerics.
 
 Forward (Pallas path, double-buffered)
     The grid is ``(ceil(B/block_b), T)``; the batch is padded on the host to

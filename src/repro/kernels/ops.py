@@ -63,6 +63,12 @@ def fused_embedding_bag(pool, indices, weights=None, *, offsets=None,
     counts of frequency-packed hot leading rows served from the VMEM hot-row
     cache on the Pallas path. All impls share a custom VJP whose backward
     scatter-adds sparse table gradients via ``segment_sum``.
+
+    ``table_hot`` is a static compile-time plan: a live re-plan
+    (``repro.train.replan``) permutes the pool rows to the new
+    frequency-packed layout and re-enters here with the new plan — numerics
+    are identical for any plan, so old-plan checkpoints restore bit-exactly
+    onto new ones.
     """
     impl = impl or _DEFAULT_IMPL
     from repro.kernels import fused_embedding as fe

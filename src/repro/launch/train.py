@@ -6,47 +6,79 @@ production launch would (the multi-pod path is exercised by dryrun.py).
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
         --steps 100 --batch 8 --seq 64 [--reduced/--full] [--ckpt-dir DIR]
+
+The paper's own DLRM workloads run the same way (``--arch wide_deep``,
+``xdeepfm`` or ``dcn``) with the live re-planning loop wired in: a
+``HotTableTracker`` folds every batch's sparse ids into decayed rolling
+counts, and every ``--replan-every`` steps the launcher asks it whether the
+placement drifted past ``--imbalance-threshold`` — if so, it snapshots,
+permutes the pooled rows, recompiles the step with the measured ``table_hot``
+plan, and keeps training on remapped ids (bit-exact across the cut).
+
+    PYTHONPATH=src python -m repro.launch.train --arch wide_deep \
+        --steps 200 --zipf-alpha 1.05 --replan-every 20
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import reduce_config
-from repro.configs.registry import get_arch
+from repro.configs.registry import DLRMS, get_arch, get_dlrm
 from repro.core.flash_checkpoint import FlashCheckpoint
-from repro.core.sharding_service import ShardingService
+from repro.core.sharding_service import HotTableTracker, ShardingService
 from repro.data.pipeline import ShardDataLoader
-from repro.data.synthetic import lm_batch
+from repro.data.synthetic import criteo_batch, lm_batch
 from repro.models.registry import build_model
-from repro.train import optim, trainer
+from repro.train import optim, replan, trainer
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="default: 8 for LMs, the config's batch for DLRMs")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--optimizer", default="adamw",
-                    choices=["adam", "adamw", "adagrad", "sgd"])
+    ap.add_argument("--optimizer", default=None,
+                    choices=["adam", "adamw", "adagrad", "sgd"],
+                    help="default: adamw for LMs, adagrad for DLRMs")
     ap.add_argument("--full", action="store_true",
                     help="use the full published config (needs real HW)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--resume", action="store_true")
+    # --- DLRM / live re-planning knobs (--arch wide_deep|xdeepfm|dcn) ------
+    ap.add_argument("--zipf-alpha", type=float, default=1.05,
+                    help="power-law skew of the sparse-feature stream (DLRM)")
+    ap.add_argument("--hot-rows", type=int, default=64,
+                    help="VMEM hot-row cache budget in pooled rows (DLRM)")
+    ap.add_argument("--n-ps", type=int, default=4,
+                    help="PS shard count the placement plan targets (DLRM)")
+    ap.add_argument("--replan-every", type=int, default=0, metavar="N",
+                    help="poll the hot tracker for a re-plan every N steps "
+                         "(0 disables live re-planning)")
+    ap.add_argument("--imbalance-threshold", type=float, default=1.2,
+                    help="max/mean PS load that arms a re-plan")
     args = ap.parse_args()
+
+    if args.arch in DLRMS:
+        train_dlrm(args)
+        return
+    if args.batch is None:
+        args.batch = 8
 
     cfg = get_arch(args.arch)
     if not args.full:
         cfg = reduce_config(cfg)
     api = build_model(cfg)
-    opt = optim.make(args.optimizer, args.lr)
+    opt = optim.make(args.optimizer or "adamw", args.lr)
     print(f"arch={cfg.name} family={cfg.family} params={cfg.param_count():,} "
           f"({'full' if args.full else 'reduced'})")
 
@@ -89,6 +121,104 @@ def main() -> None:
     print(f"done: {n} steps, exactly-once={ok} (covered={covered} dup={dup})")
     if ckpt is not None:
         ckpt.save(state, n)
+        ckpt.wait()
+        print(f"checkpointed at step {n} -> {args.ckpt_dir}")
+
+
+def train_dlrm(args) -> None:
+    """DLRM training with the live embedding re-planning loop wired in.
+
+    Checkpoints are layout-stamped (``replan.save_with_layout``): each blob
+    carries the composed raw-id → layout map and the active cache plan, so
+    ``--resume`` in a fresh process keeps training correctly no matter how
+    many re-plans the previous run applied.
+    """
+    from repro.configs.dlrm_models import reduced_dlrm
+
+    cfg = get_dlrm(args.arch)
+    if not args.full:
+        cfg = reduced_dlrm(cfg)
+    cfg = dataclasses.replace(cfg, zipf_alpha=args.zipf_alpha,
+                              hot_rows_k=args.hot_rows,
+                              batch_size=args.batch or cfg.batch_size)
+    opt_name = args.optimizer or "adagrad"       # the classic DLRM optimizer
+    opt = optim.make(opt_name, args.lr)
+    print(f"arch={cfg.name} kind={cfg.kind} params={cfg.param_count():,} "
+          f"rows={cfg.total_embedding_rows:,} zipf_alpha={cfg.zipf_alpha} "
+          f"({'full' if args.full else 'reduced'})")
+
+    ckpt = FlashCheckpoint(args.ckpt_dir)
+    remapper = replan.EmbeddingRemapper(cfg.table_rows)
+    table_hot = None                             # None = cfg default plan
+    vocab_ranges = None                          # None = uniform striping
+    state = None
+    if args.resume and ckpt.latest_step() is not None:
+        state, step0, remapper, table_hot, vocab_ranges = \
+            replan.restore_with_layout(cfg, opt, ckpt)
+        print(f"resumed from step {step0} "
+              f"(layout-stamped; cache plan {'measured' if table_hot else 'default'})")
+    if state is None:
+        state = trainer.make_dlrm_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(trainer.make_dlrm_train_step(
+        cfg, opt, grad_compress=args.grad_compress, table_hot=table_hot))
+
+    tracker = HotTableTracker(
+        cfg.table_rows, n_ps=args.n_ps, hot_budget=cfg.hot_rows_k,
+        trigger=args.imbalance_threshold,
+        cooldown=max(args.replan_every, 1),
+        min_lookups=4 * cfg.batch_size * cfg.n_tables * cfg.multi_hot,
+        initial_ranges=vocab_ranges, initial_hot=table_hot)
+
+    total = args.steps * cfg.batch_size
+    svc = ShardingService(total, shard_size=max(cfg.batch_size * 8, 64))
+    loader = ShardDataLoader(
+        svc, "worker0", lambda idx: criteo_batch(cfg, 11, idx),
+        batch_size=cfg.batch_size)
+
+    t0 = time.time()
+    n = 0
+    for raw in loader:
+        batch = remapper.remap_batch(raw)
+        tracker.observe(batch["sparse"])        # worker-side heartbeat payload
+        state, m = step_fn(state, {k: jnp.asarray(v) for k, v in batch.items()})
+        n += 1
+        replanned = False
+        if n % 20 == 0 or n == 1:
+            print(f"step {n:5d} loss={float(m['loss']):.4f} "
+                  f"imbalance={tracker.imbalance():.3f} "
+                  f"({n*cfg.batch_size/(time.time()-t0):.1f} samples/s)")
+        if args.replan_every and n % args.replan_every == 0:
+            decision = tracker.maybe_replan()
+            if decision is not None:
+                # old-layout snapshot (with its own layout stamp) first, so a
+                # crash mid-replan loses nothing; apply_replan itself then
+                # permutes, re-plans placement, and recompiles
+                replan.save_with_layout(ckpt, state, int(state["step"]),
+                                        remapper, table_hot, vocab_ranges)
+                res = replan.apply_replan(state, cfg, opt, decision,
+                                          remapper=remapper, opt_name=opt_name,
+                                          grad_compress=args.grad_compress)
+                tracker.mark_applied(decision)
+                state, step_fn = res.state, res.step_fn
+                table_hot = decision.table_hot
+                vocab_ranges = decision.vocab_ranges
+                replanned = True
+                print(f"step {n:5d} RE-PLAN: imbalance "
+                      f"{decision.imbalance_before:.3f} -> "
+                      f"{decision.imbalance_after:.3f}, "
+                      f"cache rows {sum(decision.table_hot)}")
+        if args.ckpt_dir and n % args.ckpt_every == 0 and not replanned:
+            # key by the GLOBAL step so resumed runs sort above their
+            # pre-resume checkpoints (n restarts at 0 on every process)
+            replan.save_with_layout(ckpt, state, int(state["step"]),
+                                    remapper, table_hot, vocab_ranges)
+    ok, covered, dup = svc.coverage(0)
+    print(f"done: {n} steps, exactly-once={ok} (covered={covered} dup={dup}), "
+          f"{tracker.n_replans} re-plan(s), final imbalance "
+          f"{tracker.imbalance():.3f}")
+    if args.ckpt_dir:
+        replan.save_with_layout(ckpt, state, int(state["step"]),
+                                remapper, table_hot, vocab_ranges)
         ckpt.wait()
         print(f"checkpointed at step {n} -> {args.ckpt_dir}")
 

@@ -148,16 +148,20 @@ def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
     raise ValueError(cfg.kind)
 
 
-def dlrm_loss(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
-    """Binary cross-entropy with logits on CTR labels."""
-    logit = dlrm_forward(params, batch, cfg)
+def dlrm_loss(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
+    """Binary cross-entropy with logits on CTR labels.
+
+    ``table_hot`` is forwarded to ``dlrm_forward`` so a live re-plan's
+    measured cache plan reaches the fused engine (None = ``cfg.table_hot``).
+    """
+    logit = dlrm_forward(params, batch, cfg, table_hot=table_hot)
     y = batch["label"].astype(jnp.float32)
     return jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
 
 
-def dlrm_auc(params, batch, cfg: DLRMConfig) -> jnp.ndarray:
+def dlrm_auc(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
     """Pairwise AUC estimate on one batch (for Fig 8 convergence tracking)."""
-    logit = dlrm_forward(params, batch, cfg)
+    logit = dlrm_forward(params, batch, cfg, table_hot=table_hot)
     y = batch["label"].astype(jnp.float32)
     pos = y[:, None] > y[None, :]
     gt = (logit[:, None] > logit[None, :]).astype(jnp.float32)

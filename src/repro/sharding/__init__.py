@@ -1,3 +1,5 @@
 from repro.sharding.policy import (  # noqa: F401
-    ShardingPolicy, make_policy, constrain, current_policy, use_policy, logical_spec,
+    ShardingPolicy, make_policy, make_dlrm_policy, constrain, current_policy,
+    use_policy, logical_spec, pack_hot_ranges, balanced_vocab_ranges,
+    uniform_vocab_ranges, frequency_permutation, placement_imbalance,
 )

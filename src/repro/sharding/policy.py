@@ -6,7 +6,12 @@ The paper's PS architecture maps onto a 2-D/3-D device mesh:
   parameter sharding (the paper's ``w`` and, across pods, elastic scale-out).
 * ``"model"`` — the *parameter-server* axis: embedding rows (vocab), attention
   heads, FFN hidden, experts (the paper's ``p``; embedding tables distributed
-  across PSes, §2.1/§4.1).
+  across PSes, §2.1/§4.1). For skewed DLRM traffic the vocab axis carries an
+  optional *balanced range plan* (``ShardingPolicy.vocab_ranges``): contiguous
+  pooled-row ranges with ~equal access mass per PS, planned by
+  ``balanced_vocab_ranges`` and re-planned live by
+  ``repro.core.sharding_service.HotTableTracker`` — the placement-time fix
+  for the paper's hot-PS problem, replacing blind uniform striping.
 
 Every parameter/activation is annotated with *logical* axis names; per
 (arch × shape × mesh) the policy resolves them to mesh axes, handling
@@ -17,7 +22,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -43,11 +48,30 @@ _STATE = threading.local()
 
 @dataclass(frozen=True)
 class ShardingPolicy:
+    """Resolved logical-axis rules for one (arch × shape × mesh) cell.
+
+    ``rules`` maps each logical axis name to the mesh axes it shards over.
+    ``vocab_ranges``, when set, is the frequency-balanced contiguous
+    pooled-row plan for the PS ("vocab") axis — the paper's hot-PS fix.
+    GSPMD NamedShardings can only express equal splits, so the ranges ride
+    on the policy for every layer that *places* rows (the replan
+    orchestrator, PS cost/placement models, benchmarks), while ``spec``
+    keeps producing the equal-split approximation for compiled collectives.
+    """
     mesh: Optional[Mesh]
     rules: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    vocab_ranges: Optional[Tuple[Tuple[int, int], ...]] = None
 
     # -- resolution ---------------------------------------------------------
     def spec(self, names: Sequence[Optional[str]]) -> P:
+        """Resolve logical axis names to a concrete ``PartitionSpec``.
+
+        Args:
+          names: one logical axis name (or None = replicated) per array dim.
+
+        Returns a ``PartitionSpec`` where each mesh axis is used at most once
+        (duplicates later in ``names`` fall back to replication).
+        """
         parts = []
         used = set()
         for n in names:
@@ -62,11 +86,13 @@ class ShardingPolicy:
         return P(*parts)
 
     def sharding(self, names: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        """``spec(names)`` bound to this policy's mesh (None without a mesh)."""
         if self.mesh is None:
             return None
         return NamedSharding(self.mesh, self.spec(names))
 
     def axis_size(self, logical: str) -> int:
+        """Number of shards a logical axis is split into (1 = replicated)."""
         if self.mesh is None:
             return 1
         n = 1
@@ -74,16 +100,49 @@ class ShardingPolicy:
             n *= self.mesh.shape[a]
         return n
 
+    # -- balanced PS row placement (hot-PS fix, §2.1/Fig 12) ----------------
+    def with_vocab_ranges(
+            self, ranges: Optional[Sequence[Tuple[int, int]]]) -> "ShardingPolicy":
+        """Copy of this policy carrying a balanced vocab-range plan.
+
+        Args:
+          ranges: contiguous pooled-row ``(start, end)`` per PS shard (e.g.
+                  from ``balanced_vocab_ranges`` or a ``ReplanDecision``), or
+                  None to drop back to uniform striping.
+        """
+        if ranges is None:
+            return replace(self, vocab_ranges=None)
+        return replace(self, vocab_ranges=tuple(
+            (int(s), int(e)) for s, e in ranges))
+
+    def ps_row_ranges(self, total_rows: int) -> List[Tuple[int, int]]:
+        """Pooled-row range each PS shard owns under this policy.
+
+        The balanced plan when one is attached, otherwise the uniform
+        striping the "vocab" rule implies (``axis_size("vocab")`` equal
+        contiguous splits — what GSPMD physically materializes).
+
+        Args:
+          total_rows: pooled embedding row count (``sum(table_rows)``).
+
+        Returns one ``(start, end)`` half-open range per PS shard.
+        """
+        if self.vocab_ranges is not None:
+            return list(self.vocab_ranges)
+        return uniform_vocab_ranges(total_rows, self.axis_size("vocab"))
+
 
 NULL_POLICY = ShardingPolicy(mesh=None, rules={})
 
 
 def current_policy() -> ShardingPolicy:
+    """The thread-active policy installed by ``use_policy`` (or NULL_POLICY)."""
     return getattr(_STATE, "policy", NULL_POLICY)
 
 
 @contextlib.contextmanager
 def use_policy(policy: ShardingPolicy):
+    """Context manager installing ``policy`` as the thread-active policy."""
     prev = getattr(_STATE, "policy", NULL_POLICY)
     _STATE.policy = policy
     try:
@@ -190,6 +249,34 @@ def make_policy(mesh: Optional[Mesh], cfg: ModelConfig, shape: ShapeConfig,
     return ShardingPolicy(mesh=mesh, rules=rules)
 
 
+def make_dlrm_policy(mesh: Optional[Mesh],
+                     vocab_ranges: Optional[Sequence[Tuple[int, int]]] = None
+                     ) -> ShardingPolicy:
+    """Policy for the paper's own DLRM workloads (pooled tables over PSes).
+
+    The pooled embedding rows ("vocab") shard over the "model" axis — the PS
+    fleet of §2.1 — and activations ("batch") over the data axes. A balanced
+    ``vocab_ranges`` plan (from ``balanced_vocab_ranges`` or a live
+    ``ReplanDecision``) rides on the policy so every placement-aware layer
+    sees frequency-balanced PS ranges instead of uniform striping.
+
+    Args:
+      mesh:         device mesh (None = single host, no sharding).
+      vocab_ranges: optional balanced contiguous pooled-row plan.
+
+    Returns the resolved ``ShardingPolicy``.
+    """
+    if mesh is None:
+        return NULL_POLICY.with_vocab_ranges(vocab_ranges)
+    axes = dict(mesh.shape)
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    rules: Dict[str, Tuple[str, ...]] = {
+        "vocab": ("model",) if "model" in axes else (),
+        "batch": data_axes,
+    }
+    return ShardingPolicy(mesh=mesh, rules=rules).with_vocab_ranges(vocab_ranges)
+
+
 # ---------------------------------------------------------------------------
 # Frequency-aware pooled-row placement (RecShard-style, feeds the fused
 # embedding engine's hot-row cache and the PS row-range assignment)
@@ -203,6 +290,16 @@ def pack_hot_ranges(counts: np.ndarray, table_rows: Sequence[int],
     embedding engine. Assumes rows are frequency-packed within each table
     (hot ids lead; see ``frequency_permutation`` for hashed layouts), so the
     returned prefix of table ``t`` covers exactly its selected hot rows.
+    RecShard's statistical tiering applied to the VMEM cache (paper §2.1's
+    lookup hot spot).
+
+    Args:
+      counts:     (sum(table_rows),) pooled per-row access counts.
+      table_rows: per-table row counts (defines table boundaries).
+      budget:     total cache rows to plan (clipped to the pool size).
+
+    Returns per-table hot-prefix sizes; never caches never-touched rows, so
+    the sizes may sum to less than ``budget``.
     """
     counts = np.asarray(counts)
     table_rows = tuple(int(r) for r in table_rows)
@@ -225,7 +322,16 @@ def frequency_permutation(counts: np.ndarray,
     table but reorders each table by descending access count, producing the
     frequency-packed layout `pack_hot_ranges` and the hot-row cache assume.
     Apply it to the pool rows once at (re)build time and to incoming ids at
-    ingestion — the remap itself never sits on the training hot path.
+    ingestion — the remap itself never sits on the training hot path. Live
+    re-plans re-derive it from decayed counts and apply it with
+    ``repro.train.replan.permute_train_state`` (bit-exact, §5.2-style
+    restore onto the new layout).
+
+    Args:
+      counts:     (sum(table_rows),) pooled per-row access counts.
+      table_rows: per-table row counts (permutation never crosses tables).
+
+    Returns the (sum(table_rows),) int64 permutation, stable within ties.
     """
     counts = np.asarray(counts)
     perm = np.empty((counts.size,), np.int64)
@@ -238,6 +344,25 @@ def frequency_permutation(counts: np.ndarray,
     return perm
 
 
+def uniform_vocab_ranges(total_rows: int, n_shards: int) -> List[Tuple[int, int]]:
+    """Equal-size contiguous pooled-row range per PS shard (blind striping).
+
+    The skew-oblivious baseline that ``balanced_vocab_ranges`` replaces —
+    and what GSPMD equal splits physically materialize. Kept as the single
+    source of the striping formula for the policy, the hot tracker's initial
+    plan, and the benchmarks' baseline rows.
+
+    Args:
+      total_rows: pooled embedding row count.
+      n_shards:   PS shard count.
+
+    Returns ``n_shards`` half-open ``(start, end)`` ranges covering
+    ``[0, total_rows)``.
+    """
+    n = max(1, int(n_shards))
+    return [(i * total_rows // n, (i + 1) * total_rows // n) for i in range(n)]
+
+
 def balanced_vocab_ranges(counts: np.ndarray,
                           n_shards: int) -> List[Tuple[int, int]]:
     """Contiguous pooled-row ranges with ~equal access mass per PS shard.
@@ -246,7 +371,17 @@ def balanced_vocab_ranges(counts: np.ndarray,
     sends nearly all the skewed traffic to whichever shard holds the hot
     head, while equal-mass boundaries (inverse-CDF of the access histogram)
     keep per-PS lookup load balanced — the paper's hot-PS mitigation, applied
-    at placement time instead of after the fact.
+    at placement time instead of after the fact. Attach the result to a
+    ``ShardingPolicy`` via ``with_vocab_ranges`` so the sharded training path
+    carries the plan alongside its NamedShardings.
+
+    Args:
+      counts:   (R,) pooled per-row access counts (zeros = uniform split).
+      n_shards: PS shard count.
+
+    Returns ``n_shards`` contiguous half-open ``(start, end)`` ranges
+    covering ``[0, R)``; boundary rows go to whichever side leaves the left
+    shard's mass closer to its equal-mass target.
     """
     counts = np.asarray(counts, np.float64)
     n_shards = max(1, int(n_shards))
@@ -269,7 +404,17 @@ def balanced_vocab_ranges(counts: np.ndarray,
 
 def placement_imbalance(counts: np.ndarray,
                         ranges: Sequence[Tuple[int, int]]) -> float:
-    """max/mean per-shard access mass (1.0 = perfectly balanced)."""
+    """max/mean per-shard access mass (1.0 = perfectly balanced).
+
+    The hot-PS metric of Fig 12 and the live re-plan trigger quantity
+    (``HotTableTracker.trigger`` compares against this).
+
+    Args:
+      counts: (R,) pooled per-row access counts.
+      ranges: one ``(start, end)`` pooled-row range per PS shard.
+
+    Returns the max/mean per-shard lookup load (1.0 when no mass observed).
+    """
     counts = np.asarray(counts, np.float64)
     loads = np.array([counts[s:e].sum() for s, e in ranges])
     mean = loads.mean()

@@ -1,9 +1,15 @@
-"""Elastic re-meshing: resume a job on a different device mesh.
+"""Elastic re-meshing: resume a job on a different device mesh or row layout.
 
 TPU analog of the paper's horizontal scaling: the flash-checkpoint stores
 mesh-agnostic host arrays; this module rebuilds shardings for the *new* mesh
 (via the logical-axis policy) and device_puts the restored state — i.e. a
 seamless worker/PS count change without re-partitioning logic in user code.
+
+``resume_dlrm_on_mesh`` is the same substrate for the paper's own DLRM
+workloads, with one extra degree of freedom: an optional ``ReplanDecision``
+from the live re-planning loop, applied as a bit-exact pooled-row
+permutation after restore — so a checkpoint written under the OLD placement
+plan resumes under the NEW one (see ``repro.train.replan``).
 """
 from __future__ import annotations
 
@@ -12,9 +18,12 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 
 from repro.configs.base import ShapeConfig
+from repro.configs.dlrm_models import DLRMConfig
 from repro.core.flash_checkpoint import FlashCheckpoint
 from repro.models.registry import ModelAPI
-from repro.sharding.policy import ShardingPolicy, logical_spec, make_policy
+from repro.sharding.policy import (
+    ShardingPolicy, logical_spec, make_dlrm_policy, make_policy,
+)
 from repro.train import trainer as trainer_mod
 from repro.train.optim import Optimizer
 
@@ -39,4 +48,45 @@ def resume_on_mesh(api: ModelAPI, optimizer: Optimizer, opt_name: str,
         jax.random.PRNGKey(0))
     shardings = state_shardings(api, opt_name, policy) if mesh is not None else None
     state, restored_step = ckpt.restore(like, step, shardings=shardings)
+    return state, restored_step, policy
+
+
+# --- DLRM (paper workloads) -------------------------------------------------
+def dlrm_state_shardings(cfg: DLRMConfig, opt_name: str,
+                         policy: ShardingPolicy):
+    """NamedShardings for the full DLRM train state under a policy."""
+    specs = trainer_mod.dlrm_train_state_specs(cfg, opt_name)
+    return logical_spec(None, specs, policy)
+
+
+def resume_dlrm_on_mesh(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
+                        ckpt: FlashCheckpoint, mesh, *,
+                        decision=None, step: Optional[int] = None
+                        ) -> Tuple[Dict[str, Any], int, ShardingPolicy]:
+    """Restore a DLRM checkpoint onto a mesh and (optionally) a new row plan.
+
+    Args:
+      cfg, optimizer, opt_name: the job being resumed.
+      ckpt:     flash-checkpoint holding mesh-agnostic host arrays.
+      mesh:     target mesh (None = single host).
+      decision: optional ``ReplanDecision``; its permutation is applied to
+                the restored pooled rows (bit-exact) and its balanced
+                ``vocab_ranges`` ride on the returned policy.
+      step:     checkpoint step (None = latest).
+
+    Returns ``(state, restored_step, policy)``; the caller recompiles its
+    train step with ``table_hot=decision.table_hot`` to finish the re-plan.
+    """
+    ranges = None if decision is None else decision.vocab_ranges
+    policy = make_dlrm_policy(mesh, vocab_ranges=ranges)
+    like = jax.eval_shape(
+        lambda k: trainer_mod.make_dlrm_train_state(cfg, optimizer, k),
+        jax.random.PRNGKey(0))
+    shardings = dlrm_state_shardings(cfg, opt_name, policy) \
+        if mesh is not None else None
+    state, restored_step = ckpt.restore(like, step, shardings=shardings)
+    if decision is not None:
+        from repro.train.replan import permute_train_state
+        state = permute_train_state(state, cfg.total_embedding_rows,
+                                    decision.permutation)
     return state, restored_step, policy

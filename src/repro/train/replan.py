@@ -1,0 +1,284 @@
+"""Live embedding re-planning: observed skew → re-sharded, recompiled step.
+
+DLRover-RM's core claim is *dynamic* adjustment (§4–§5): the job master
+watches a running job and re-allocates mid-flight. For embeddings the thing
+worth re-allocating is row placement — which rows sit in the fused engine's
+VMEM hot-row cache and how the pooled rows split across PS shards — because
+skew drifts (RecShard / MTrainS): yesterday's hot head is today's lukewarm
+middle, and a plan frozen at compile time re-creates the hot-PS problem it
+was built to solve.
+
+This module closes the loop around ``HotTableTracker``'s ``ReplanDecision``:
+
+    observe (decayed rolling counts, worker-side ids)
+      → trigger (imbalance over threshold, hysteresis)
+        → snapshot   (FlashCheckpoint, old layout — §5.2 flash checkpoint)
+        → permute    (pooled rows + optimizer moments, within-table only)
+        → re-plan    (balanced vocab ranges onto the ShardingPolicy,
+                      measured ``table_hot`` prefixes for the VMEM cache)
+        → recompile  (``make_dlrm_train_step(..., table_hot=new plan)``)
+        → remap      (incoming ids, off the hot path, composable)
+
+Everything is **bit-exact**: a permutation gathers identical row values, ids
+are remapped consistently, and the backward ``segment_sum`` sees the same
+per-row contributions in the same flat order — so the resumed step's forward
+loss equals the pre-replan checkpoint's to the last ulp (test_replan.py
+asserts this), and an OLD-plan checkpoint restores losslessly onto a NEW
+plan via ``restore_on_plan`` / ``elastic.resume_dlrm_on_mesh``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dlrm_models import DLRMConfig
+from repro.core.flash_checkpoint import FlashCheckpoint
+from repro.core.sharding_service import ReplanDecision
+from repro.kernels.fused_embedding import table_offsets
+from repro.sharding.policy import ShardingPolicy, make_dlrm_policy
+from repro.train import elastic
+from repro.train import trainer as trainer_mod
+from repro.train.optim import Optimizer
+
+
+class EmbeddingRemapper:
+    """Composable raw-id → current-layout remap (ingestion side of a re-plan).
+
+    The data stream keeps emitting *raw* per-table-local ids; after each
+    applied re-plan the pooled rows move, so lookups must go through the
+    composed permutation. The remap is a single numpy take per batch on the
+    input pipeline — it never touches the jit-compiled training step.
+    """
+
+    def __init__(self, table_rows):
+        self.table_rows = tuple(int(r) for r in table_rows)
+        self.offsets = np.asarray(table_offsets(self.table_rows), np.int64)
+        self.total_rows = int(sum(self.table_rows))
+        # raw global row -> current layout global row (identity before any plan)
+        self.map = np.arange(self.total_rows, dtype=np.int64)
+        self.n_plans = 0
+
+    def compose(self, permutation: np.ndarray) -> None:
+        """Fold one applied re-plan's layout permutation into the remap."""
+        self.map = np.asarray(permutation, np.int64)[self.map]
+        self.n_plans += 1
+
+    def remap(self, sparse: np.ndarray) -> np.ndarray:
+        """(B, T, H) raw per-table-local ids → current-layout local ids.
+
+        Permutations never cross table boundaries, so the result is again a
+        valid per-table-local id tensor (same dtype as the input).
+        """
+        sparse = np.asarray(sparse)
+        g = sparse.astype(np.int64) + self.offsets[None, :, None]
+        return (self.map[g] - self.offsets[None, :, None]).astype(sparse.dtype)
+
+    def remap_batch(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Copy of a criteo-style batch dict with its "sparse" ids remapped."""
+        out = dict(batch)
+        out["sparse"] = self.remap(batch["sparse"])
+        return out
+
+
+def permute_train_state(state, total_rows: int, permutation: np.ndarray):
+    """Move every pooled-row leaf of a DLRM train state to a new layout.
+
+    Applies ``new[perm[i]] = old[i]`` along axis 0 of the embedding-table
+    leaves — ``params["tables"]``, the wide part, and their optimizer-state
+    mirrors (adagrad accumulators, adam moments), identified by carrying a
+    ``tables``/``wide`` path key AND a leading dim of ``total_rows``. Dense
+    MLP/cross/CIN leaves and scalars pass through untouched.
+
+    Args:
+      state:       {params, opt, step} pytree (host or device arrays).
+      total_rows:  ``cfg.total_embedding_rows`` of the job.
+      permutation: layout permutation from a ``ReplanDecision``.
+
+    Returns a new state pytree; row *values* are moved, never changed, which
+    is what makes re-planning bit-exact.
+    """
+    inv = jnp.asarray(np.argsort(np.asarray(permutation)))
+
+    def visit(path, leaf):
+        keys = {p.key for p in path if isinstance(p, jax.tree_util.DictKey)}
+        if not ({"tables", "wide"} & keys):
+            return leaf
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == total_rows:
+            return jnp.take(jnp.asarray(leaf), inv, axis=0)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, state)
+
+
+@dataclass
+class ReplanResult:
+    """Everything the training loop swaps in after an applied re-plan."""
+    state: Dict[str, Any]                   # permuted (and re-placed) state
+    step_fn: Callable                       # recompiled with the new table_hot
+    policy: ShardingPolicy                  # carries the balanced vocab ranges
+    decision: ReplanDecision
+
+
+def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
+                 decision: ReplanDecision, *,
+                 remapper: Optional[EmbeddingRemapper] = None,
+                 mesh=None, opt_name: str = "adagrad",
+                 grad_compress: bool = False) -> ReplanResult:
+    """Execute one live re-plan on a running job's state.
+
+    The seamless-migration recipe of §5.2 applied to row placement: permute
+    the pooled rows and their optimizer moments to the decision's
+    frequency-packed layout, attach the balanced vocab ranges to the
+    sharding policy (re-placing the state when a mesh is present), and
+    recompile the train step with the measured ``table_hot`` cache plan.
+    The caller must also route future batches through ``remapper`` (composed
+    here) and call ``tracker.mark_applied(decision)`` so observation follows
+    the layout. For crash safety, write a layout-stamped snapshot of the
+    OLD state with ``save_with_layout`` *before* calling this (stamping the
+    pre-compose map) — ``restore_on_plan`` then resumes it onto the new
+    plan bit-exactly; a single blob schema, no format ambiguity.
+
+    Args:
+      state:     live {params, opt, step} pytree (old layout).
+      cfg:       the DLRM job config.
+      optimizer: the job's optimizer (for the recompiled step).
+      decision:  an accepted ``HotTableTracker.maybe_replan`` decision.
+      remapper:  optional id remapper to compose with the new permutation.
+      mesh:      optional device mesh; the permuted state is re-placed under
+                 the new policy's shardings.
+      opt_name:  optimizer name for state specs ("adagrad", "adam", ...).
+      grad_compress: forwarded to the recompiled train step.
+
+    Returns a ``ReplanResult``; training continues with ``result.state`` and
+    ``result.step_fn`` on remapped batches.
+    """
+    new_state = permute_train_state(state, cfg.total_embedding_rows,
+                                    decision.permutation)
+    if remapper is not None:
+        remapper.compose(decision.permutation)
+    policy = make_dlrm_policy(mesh, vocab_ranges=decision.vocab_ranges)
+    if mesh is not None:
+        shardings = elastic.dlrm_state_shardings(cfg, opt_name, policy)
+        new_state = jax.device_put(new_state, shardings)
+    step_fn = jax.jit(trainer_mod.make_dlrm_train_step(
+        cfg, optimizer, grad_compress=grad_compress,
+        table_hot=decision.table_hot))
+    return ReplanResult(state=new_state, step_fn=step_fn, policy=policy,
+                        decision=decision)
+
+
+def restore_on_plan(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
+                    ckpt: FlashCheckpoint, decision: ReplanDecision, *,
+                    mesh=None, step: Optional[int] = None,
+                    grad_compress: bool = False
+                    ) -> Tuple[Dict[str, Any], int, Callable, ShardingPolicy,
+                               EmbeddingRemapper]:
+    """Restore an OLD-plan layout-stamped checkpoint onto a NEW plan.
+
+    The elastic-restart half of re-planning: a worker that joins (or a job
+    that restarts) after a re-plan only has checkpoints written under the
+    previous layout (via ``save_with_layout``). Restoring through the
+    decision's permutation yields a state whose forward loss on remapped
+    batches is bit-identical to what the old layout would have produced —
+    the restored remapper is returned already composed with the decision.
+
+    Args:
+      cfg, optimizer, opt_name: the job being resumed.
+      ckpt:     flash checkpoint holding the old-layout stamped snapshot.
+      decision: the applied re-plan to restore onto.
+      mesh:     optional target mesh.
+      step:     checkpoint step (None = latest).
+      grad_compress: forwarded to the recompiled train step.
+
+    Returns ``(state, restored_step, step_fn, policy, remapper)``.
+    """
+    state, restored_step, remapper, _old_hot, _old_ranges = \
+        restore_with_layout(cfg, optimizer, ckpt, step=step)
+    state = permute_train_state(state, cfg.total_embedding_rows,
+                                decision.permutation)
+    remapper.compose(decision.permutation)
+    policy = make_dlrm_policy(mesh, vocab_ranges=decision.vocab_ranges)
+    if mesh is not None:
+        state = jax.device_put(
+            state, elastic.dlrm_state_shardings(cfg, opt_name, policy))
+    step_fn = jax.jit(trainer_mod.make_dlrm_train_step(
+        cfg, optimizer, grad_compress=grad_compress,
+        table_hot=decision.table_hot))
+    return state, restored_step, step_fn, policy, remapper
+
+
+# --------------------------------------------------------- layout-stamped ckpt
+def save_with_layout(ckpt: FlashCheckpoint, state, step: int,
+                     remapper: EmbeddingRemapper,
+                     table_hot: Optional[Tuple[int, ...]] = None,
+                     vocab_ranges: Optional[Sequence[Tuple[int, int]]] = None
+                     ) -> None:
+    """Checkpoint the state together with its row-layout provenance.
+
+    A plain state snapshot is only restorable by a process that still holds
+    the ``ReplanDecision`` history (the permutations live in memory). This
+    variant stamps the remapper's composed raw-id → layout map, the active
+    ``table_hot`` cache plan and the applied PS ``vocab_ranges`` into the
+    blob, making the checkpoint self-describing: a *fresh* process restores
+    with ``restore_with_layout`` and keeps training (and re-planning from
+    the correct baseline) no matter how many re-plans preceded it.
+
+    Args:
+      ckpt:      flash checkpoint to write to.
+      state:     live {params, opt, step} pytree (current layout).
+      step:      checkpoint step key.
+      remapper:  the job's id remapper (its map matches ``state``'s layout).
+      table_hot: the cache plan compiled into the current step (None = the
+                 config default).
+      vocab_ranges: the applied balanced PS ranges (None = uniform striping,
+                 i.e. no placement plan applied yet).
+    """
+    hot = (np.full(len(remapper.table_rows), -1, np.int64)
+           if table_hot is None else np.asarray(table_hot, np.int64))
+    ranges = (np.zeros((0,), np.int64) if vocab_ranges is None
+              else np.asarray(vocab_ranges, np.int64).reshape(-1))
+    ckpt.save({"state": state, "layout": np.asarray(remapper.map, np.int64),
+               "table_hot": hot, "vocab_ranges": ranges}, step)
+
+
+def restore_with_layout(cfg: DLRMConfig, optimizer: Optimizer,
+                        ckpt: FlashCheckpoint, *, step: Optional[int] = None
+                        ) -> Tuple[Dict[str, Any], int, EmbeddingRemapper,
+                                   Optional[Tuple[int, ...]],
+                                   Optional[Tuple[Tuple[int, int], ...]]]:
+    """Restore a ``save_with_layout`` checkpoint in a fresh process.
+
+    Args:
+      cfg, optimizer: the job being resumed (shape source for the restore).
+      ckpt: flash checkpoint holding layout-stamped blobs.
+      step: checkpoint step (None = latest).
+
+    Returns ``(state, restored_step, remapper, table_hot, vocab_ranges)``:
+    the remapper is reconstructed from the stamped map (route raw batches
+    through it), ``table_hot`` is the cache plan to recompile with (None =
+    config default), and ``vocab_ranges`` is the applied placement plan to
+    seed a fresh ``HotTableTracker``'s baseline with (None = uniform).
+    """
+    n_tables = len(cfg.table_rows)
+    like = {
+        "state": jax.eval_shape(
+            lambda k: trainer_mod.make_dlrm_train_state(cfg, optimizer, k),
+            jax.random.PRNGKey(0)),
+        "layout": jax.ShapeDtypeStruct((cfg.total_embedding_rows,), jnp.int64),
+        "table_hot": jax.ShapeDtypeStruct((n_tables,), jnp.int64),
+        # placeholder shape: restore takes leaf shapes from the stored blob
+        "vocab_ranges": jax.ShapeDtypeStruct((0,), jnp.int64),
+    }
+    blob, restored_step = ckpt.restore(like, step)
+    remapper = EmbeddingRemapper(cfg.table_rows)
+    remapper.map = np.asarray(blob["layout"], np.int64)
+    hot = np.asarray(blob["table_hot"])
+    table_hot = None if (hot < 0).any() else tuple(int(k) for k in hot)
+    flat_ranges = np.asarray(blob["vocab_ranges"]).reshape(-1, 2)
+    vocab_ranges = (None if flat_ranges.size == 0 else
+                    tuple((int(s), int(e)) for s, e in flat_ranges))
+    return blob["state"], restored_step, remapper, table_hot, vocab_ranges

@@ -64,11 +64,31 @@ def make_eval_step(api: ModelAPI) -> Callable:
 
 
 # --- DLRM ---------------------------------------------------------------------
+def make_dlrm_train_state(cfg: DLRMConfig, optimizer: Optimizer,
+                          key) -> Dict[str, Any]:
+    """Fresh DLRM train state {params, opt, step} (shape source for restores)."""
+    from repro.models.dlrm import init_dlrm
+    params = init_dlrm(cfg, key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def dlrm_train_state_specs(cfg: DLRMConfig, opt_name: str) -> Dict[str, Any]:
+    """Logical-axis spec tree mirroring ``make_dlrm_train_state``'s output."""
+    from repro.models.dlrm import dlrm_param_specs
+    pspecs = dlrm_param_specs(cfg)
+    return {"params": pspecs, "opt": optim_mod.state_specs(opt_name, pspecs),
+            "step": ()}
+
+
 def make_dlrm_train_step(cfg: DLRMConfig, optimizer: Optimizer,
-                         grad_compress: bool = False) -> Callable:
+                         grad_compress: bool = False, *,
+                         table_hot=None) -> Callable:
+    """DLRM train step; ``table_hot`` bakes a measured hot-row cache plan
+    into the compiled step (a live re-plan recompiles with the new plan)."""
     def train_step(state, batch):
         loss, grads = jax.value_and_grad(
-            lambda p: dlrm_loss(p, batch, cfg))(state["params"])
+            lambda p: dlrm_loss(p, batch, cfg, table_hot=table_hot))(state["params"])
         if grad_compress:
             grads = optim_mod.compress_grads(grads)
         gnorm = optim_mod.global_norm(grads)

@@ -1,0 +1,273 @@
+"""Live embedding re-planning: decayed counts track drift, hysteresis stops
+thrash, and a re-plan is bit-exact across checkpoint/restore boundaries.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dlrm_models import WIDE_DEEP, reduced_dlrm
+from repro.core.flash_checkpoint import FlashCheckpoint
+from repro.core.sharding_service import HotTableTracker
+from repro.data.synthetic import criteo_batch
+from repro.models.dlrm import dlrm_loss
+from repro.train import optim, replan, trainer
+
+ROWS = 512
+CFG = dataclasses.replace(reduced_dlrm(WIDE_DEEP), table_rows=(ROWS,) * 6,
+                          zipf_alpha=1.05, hot_rows_k=48)
+N_PS = 4
+
+
+def _batch(seed, lo, shift=0):
+    """One criteo batch; ``shift`` rotates every table's ids (drifting skew)."""
+    b = criteo_batch(CFG, seed, np.arange(lo, lo + 256))
+    if shift:
+        b = dict(b, sparse=((b["sparse"].astype(np.int64) + shift) % ROWS
+                            ).astype(b["sparse"].dtype))
+    return b
+
+
+def _jb(b):
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+# ---------------------------------------------------------------- decayed stats
+def test_decayed_counts_converge_under_drifting_skew():
+    """After the skew drifts, the rolling window forgets the old hot head and
+    ranks the new one first — per table, not just globally."""
+    t = HotTableTracker(CFG.table_rows, n_ps=N_PS, decay=0.8)
+    for i in range(10):
+        t.observe(_batch(3, 256 * i)["sparse"])
+    off = t.offsets
+    counts = t.snapshot()
+    for o in off:                       # zipf rank 0 is the hottest raw id
+        assert int(np.argmax(counts[o:o + ROWS])) == 0
+    shift = 157
+    for i in range(20):                 # drift: hot head rotates to id `shift`
+        t.observe(_batch(3, 4096 + 256 * i, shift=shift)["sparse"])
+    counts = t.snapshot()
+    for o in off:
+        assert int(np.argmax(counts[o:o + ROWS])) == shift
+        # the old head's decayed mass is a small fraction of the new head's
+        assert counts[o] < 0.2 * counts[o + shift]
+
+
+def test_observe_counts_matches_observe():
+    a = HotTableTracker(CFG.table_rows, decay=0.9)
+    b = HotTableTracker(CFG.table_rows, decay=0.9)
+    off = np.asarray(a.offsets)
+    for i in range(3):
+        sp = _batch(5, 256 * i)["sparse"]
+        a.observe(sp)
+        flat = (sp.astype(np.int64) + off[None, :, None]).reshape(-1)
+        b.observe_counts(np.bincount(flat, minlength=a.total_rows))
+    np.testing.assert_allclose(a.snapshot(), b.snapshot())
+
+
+# ----------------------------------------------------------------- hysteresis
+def _warmed_tracker(cooldown=4, trigger=1.2):
+    t = HotTableTracker(CFG.table_rows, n_ps=N_PS, hot_budget=CFG.hot_rows_k,
+                        decay=0.8, trigger=trigger, cooldown=cooldown,
+                        min_lookups=512)
+    for i in range(6):
+        t.observe(_batch(3, 256 * i)["sparse"])
+    return t
+
+
+def test_replan_triggers_on_skew_and_cools_down():
+    t = _warmed_tracker(cooldown=6)
+    d1 = t.maybe_replan()
+    assert d1 is not None                       # uniform striping has gone hot
+    assert d1.imbalance_before >= 1.2
+    assert d1.imbalance_after <= 1.05
+    t.mark_applied(d1)
+
+    # immediately drift hard — but the cooldown gates back-to-back re-plans
+    remap = replan.EmbeddingRemapper(CFG.table_rows)
+    remap.compose(d1.permutation)
+    for i in range(5):
+        t.observe(remap.remap(_batch(3, 2048 + 256 * i, shift=157)["sparse"]))
+    assert t.imbalance() > 1.2                  # drift is real and visible...
+    assert t.maybe_replan() is None             # ...but inside the cooldown
+    t.observe(remap.remap(_batch(3, 4096, shift=157)["sparse"]))
+    d2 = t.maybe_replan()                       # cooldown elapsed: fires
+    assert d2 is not None and d2.imbalance_after <= 1.05
+
+
+def test_no_replan_when_plan_still_good():
+    """Steady traffic after an applied plan never re-triggers (no thrash)."""
+    t = _warmed_tracker(cooldown=2)
+    d1 = t.maybe_replan()
+    t.mark_applied(d1)
+    remap = replan.EmbeddingRemapper(CFG.table_rows)
+    remap.compose(d1.permutation)
+    for i in range(8):                          # same distribution, new noise
+        t.observe(remap.remap(_batch(9, 256 * i)["sparse"]))
+        assert t.maybe_replan() is None
+    assert t.imbalance() < 1.1
+
+
+def test_min_lookups_gate():
+    t = HotTableTracker(CFG.table_rows, n_ps=N_PS, trigger=1.0,
+                        cooldown=0, min_lookups=10**9)
+    t.observe(_batch(3, 0)["sparse"])
+    assert t.maybe_replan() is None
+
+
+# ------------------------------------------------------- bit-exact re-planning
+def test_replan_is_bit_exact_and_restores_across_plans():
+    """End-to-end: train, drift, re-plan; the permuted state, the resumed
+    step, and an old-plan checkpoint restored onto the new plan all produce
+    bit-identical forward losses."""
+    opt = optim.adagrad(0.05)
+    state = trainer.make_dlrm_train_state(CFG, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(trainer.make_dlrm_train_step(CFG, opt))
+    tracker = HotTableTracker(CFG.table_rows, n_ps=N_PS,
+                              hot_budget=CFG.hot_rows_k, decay=0.8,
+                              trigger=1.2, cooldown=0, min_lookups=512)
+    remapper = replan.EmbeddingRemapper(CFG.table_rows)
+    for i in range(3):
+        b = _batch(7, 256 * i)
+        tracker.observe(b["sparse"])
+        state, _ = step_fn(state, _jb(b))
+
+    # access skew drifts; the applied (uniform) plan goes hot
+    shift = 157
+    for i in range(6):
+        tracker.observe(_batch(7, 2048 + 256 * i, shift=shift)["sparse"])
+    decision = tracker.maybe_replan()
+    assert decision is not None
+    assert decision.imbalance_before >= 1.2
+    assert decision.imbalance_after <= 1.05
+
+    probe = _batch(13, 10_000, shift=shift)     # post-drift traffic
+    loss_old = float(dlrm_loss(state["params"], _jb(probe), CFG))
+
+    # old-layout snapshot first (stamping the PRE-compose map), then apply
+    ckpt = FlashCheckpoint()
+    snap_step = int(state["step"])
+    replan.save_with_layout(ckpt, state, snap_step, remapper)
+    res = replan.apply_replan(state, CFG, opt, decision, remapper=remapper)
+    tracker.mark_applied(decision)
+    assert res.policy.vocab_ranges == decision.vocab_ranges
+
+    probe_new = remapper.remap_batch(probe)
+    loss_new = float(dlrm_loss(res.state["params"], _jb(probe_new), CFG,
+                               table_hot=decision.table_hot))
+    assert loss_new == loss_old                 # bit-exact, not approx
+
+    # one full resumed train step matches the old layout's step bit-exactly
+    s_old, m_old = step_fn(state, _jb(probe))
+    s_new, m_new = res.step_fn(res.state, _jb(probe_new))
+    assert float(m_new["loss"]) == float(m_old["loss"])
+    np.testing.assert_array_equal(
+        np.asarray(s_new["params"]["mlp"]["w0"]),
+        np.asarray(s_old["params"]["mlp"]["w0"]))
+    # permuted embedding rows match the old rows moved to their new slots
+    inv = np.argsort(decision.permutation)
+    np.testing.assert_array_equal(
+        np.asarray(s_new["params"]["tables"]),
+        np.asarray(s_old["params"]["tables"])[inv])
+
+    # old-plan checkpoint -> new-plan state, still bit-exact; the returned
+    # remapper comes back already composed with the decision
+    state2, restored, step_fn2, policy2, remapper2 = replan.restore_on_plan(
+        CFG, opt, "adagrad", ckpt, decision)
+    assert restored == snap_step
+    np.testing.assert_array_equal(remapper2.map, remapper.map)
+    loss2 = float(dlrm_loss(state2["params"], _jb(probe_new), CFG,
+                            table_hot=decision.table_hot))
+    assert loss2 == loss_old
+    _, m2 = step_fn2(state2, _jb(probe_new))
+    assert float(m2["loss"]) == float(m_old["loss"])
+
+
+def test_remapper_composes_across_plans():
+    rows = (8, 8)
+    r = replan.EmbeddingRemapper(rows)
+    p1 = np.array([1, 0, 2, 3, 4, 5, 6, 7,   8, 9, 10, 11, 12, 13, 15, 14])
+    p2 = np.array([0, 2, 1, 3, 4, 5, 6, 7,   9, 8, 10, 11, 12, 13, 14, 15])
+    r.compose(p1)
+    r.compose(p2)
+    sparse = np.array([[[0, 1], [6, 7]]])       # (B=1, T=2, H=2) local ids
+    out = r.remap(sparse)
+    # raw 0 -> p1 1 -> p2 2; raw 1 -> p1 0 -> p2 0 (table 0)
+    np.testing.assert_array_equal(out[0, 0], [2, 0])
+    # raw local 6 -> global 14 -> p1 15 -> p2 15 -> local 7; 7 -> 14 -> 6
+    np.testing.assert_array_equal(out[0, 1], [7, 6])
+    assert out.dtype == sparse.dtype
+
+
+def test_layout_stamped_checkpoint_survives_process_restart():
+    """save_with_layout blobs are self-describing: a fresh process (new
+    remapper, no ReplanDecision history) restores after a re-plan and
+    computes the same forward loss on the same raw data."""
+    opt = optim.adagrad(0.05)
+    state = trainer.make_dlrm_train_state(CFG, opt, jax.random.PRNGKey(2))
+    tracker = HotTableTracker(CFG.table_rows, n_ps=N_PS,
+                              hot_budget=CFG.hot_rows_k, decay=0.8,
+                              trigger=1.2, cooldown=0, min_lookups=512)
+    remapper = replan.EmbeddingRemapper(CFG.table_rows)
+    for i in range(6):
+        tracker.observe(_batch(3, 256 * i)["sparse"])
+    decision = tracker.maybe_replan()
+    res = replan.apply_replan(state, CFG, opt, decision, remapper=remapper)
+    tracker.mark_applied(decision)
+
+    ckpt = FlashCheckpoint()
+    replan.save_with_layout(ckpt, res.state, 7, remapper,
+                            decision.table_hot, decision.vocab_ranges)
+    # re-saving the same step must not corrupt the memory tier's eviction
+    replan.save_with_layout(ckpt, res.state, 7, remapper,
+                            decision.table_hot, decision.vocab_ranges)
+
+    raw = _batch(13, 20_000)
+    want = float(dlrm_loss(res.state["params"],
+                           _jb(remapper.remap_batch(raw)), CFG,
+                           table_hot=decision.table_hot))
+
+    # "fresh process": nothing carried over except the checkpoint object
+    state2, step2, remapper2, table_hot2, ranges2 = replan.restore_with_layout(
+        CFG, opt, ckpt)
+    assert step2 == 7
+    assert table_hot2 == decision.table_hot
+    assert ranges2 == decision.vocab_ranges
+    np.testing.assert_array_equal(remapper2.map, remapper.map)
+    got = float(dlrm_loss(state2["params"],
+                          _jb(remapper2.remap_batch(raw)), CFG,
+                          table_hot=table_hot2))
+    assert got == want
+
+    # a fresh tracker seeded with the stamped plan starts from the applied
+    # baseline: steady traffic does NOT re-trigger (no spurious re-plan)
+    t2 = HotTableTracker(CFG.table_rows, n_ps=N_PS, hot_budget=CFG.hot_rows_k,
+                         decay=0.8, trigger=1.2, cooldown=0, min_lookups=512,
+                         initial_ranges=ranges2, initial_hot=table_hot2)
+    assert t2.current_hot == decision.table_hot
+    for i in range(4):
+        t2.observe(remapper2.remap(_batch(3, 4096 + 256 * i)["sparse"]))
+    assert t2.imbalance() < 1.1
+    assert t2.maybe_replan() is None
+
+
+def test_permute_train_state_touches_only_pooled_rows():
+    opt = optim.adagrad(0.05)
+    state = trainer.make_dlrm_train_state(CFG, opt, jax.random.PRNGKey(1))
+    R = CFG.total_embedding_rows
+    rng = np.random.default_rng(0)
+    perm = np.concatenate([o + rng.permutation(r) for o, r in
+                           zip(CFG.table_offsets, CFG.table_rows)])
+    out = replan.permute_train_state(state, R, perm)
+    inv = np.argsort(perm)
+    np.testing.assert_array_equal(np.asarray(out["params"]["tables"]),
+                                  np.asarray(state["params"]["tables"])[inv])
+    np.testing.assert_array_equal(np.asarray(out["params"]["wide"]),
+                                  np.asarray(state["params"]["wide"])[inv])
+    np.testing.assert_array_equal(np.asarray(out["opt"]["acc"]["tables"]),
+                                  np.asarray(state["opt"]["acc"]["tables"])[inv])
+    # dense leaves and step counter pass through untouched
+    np.testing.assert_array_equal(np.asarray(out["params"]["mlp"]["w0"]),
+                                  np.asarray(state["params"]["mlp"]["w0"]))
+    assert int(out["step"]) == int(state["step"])
