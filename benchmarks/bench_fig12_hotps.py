@@ -140,6 +140,64 @@ def run() -> List[Row]:
     rows.append(("hotps_imbalance_balanced_ranges", svc.imbalance(n_ps),
                  "max/mean PS load, frequency-balanced ranges"))
 
+    # --- padded physical placement: the plan is what GSPMD places -----------
+    # Until now the balanced ranges were advisory (GSPMD NamedShardings only
+    # materialize equal splits). The padded (n_ps, max_range, D) layout makes
+    # them physical: these rows measure the MATERIALIZED store — real rows
+    # per shard from the padding mask of an actually-padded parameter array,
+    # and lookup imbalance over those physical shards — plus bit-exactness
+    # of the padded fused engine against the flat XLA reference.
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_embedding import fused_embedding_bag
+    from repro.sharding.policy import padded_layout_for_ranges
+
+    balanced = svc.ps_ranges(n_ps)
+    layout = padded_layout_for_ranges(balanced)
+    rng = np.random.default_rng(0)
+    D = cfg.embed_dim
+    pool = jnp.asarray(rng.standard_normal(
+        (cfg.total_embedding_rows, D)).astype(np.float32))
+    ppool = layout.pad_rows(pool)                 # the (n_ps, max_range, D) store
+    mask = layout.padding_mask()
+    materialized = mask.sum(axis=1)               # real rows per physical shard
+    plan_sizes = np.array([e - s for s, e in balanced])
+    rows.append(("padded_shard_rows_match_plan",
+                 float(np.array_equal(materialized, plan_sizes)),
+                 f"materialized rows/shard {materialized.tolist()} == plan"))
+    rows.append(("padded_materialized_imbalance",
+                 placement_imbalance(counts, layout.ranges),
+                 "max/mean lookup load over the PHYSICAL shards (<=1.05)"))
+    rows.append(("padded_equal_split_imbalance",
+                 placement_imbalance(counts, uniform),
+                 "what the old equal-split materialization suffered"))
+    rows.append(("padded_overhead_rows_frac",
+                 (layout.padded_rows - cfg.total_embedding_rows)
+                 / cfg.total_embedding_rows,
+                 f"padding cost of max_range={layout.max_range}"))
+
+    batch = criteo_batch(cfg, 11, np.arange(0, 256))
+    idx = jnp.asarray(batch["sparse"])
+    kw = dict(offsets=cfg.table_offsets, combiner="sum")
+    out_flat = fused_embedding_bag(pool, idx, **kw)
+    out_pad = fused_embedding_bag(ppool.reshape(-1, D), idx, layout=layout,
+                                  **kw)
+    rows.append(("padded_fwd_bitexact_err",
+                 float(jnp.abs(out_pad - out_flat).max()),
+                 "padded forward vs flat XLA reference (0 = bit-exact)"))
+    import jax as _jax
+    g_flat = _jax.grad(lambda p: jnp.sum(
+        fused_embedding_bag(p, idx, **kw) * 1.3))(pool)
+    g_pad = _jax.grad(lambda p3: jnp.sum(fused_embedding_bag(
+        p3.reshape(-1, D), idx, layout=layout, **kw) * 1.3))(ppool)
+    rows.append(("padded_bwd_bitexact_err",
+                 float(jnp.abs(layout.unpad_rows(g_pad) - g_flat).max()),
+                 "padded backward vs flat XLA reference (0 = bit-exact)"))
+    rows.append(("padded_pad_rows_grad_abs_max",
+                 float(jnp.abs(jnp.where(jnp.asarray(mask)[..., None],
+                                         0.0, g_pad)).max()),
+                 "gradient mass on padding slots (must be 0)"))
+
     # --- live re-planning under DRIFTING skew --------------------------------
     # A plan frozen at compile time re-creates the hot-PS problem the moment
     # row popularity drifts. The HotTableTracker's decayed rolling counts

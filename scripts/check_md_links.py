@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Markdown link checker (stdlib-only; the CI docs job runs this).
+"""Markdown link + orphan-page checker (stdlib-only; the CI docs job runs this).
 
 Scans every tracked ``*.md`` file for inline links/images
 (``[text](target)``) and verifies that relative targets resolve to real
@@ -7,8 +7,14 @@ files or directories. Remote (``http(s)://``, ``mailto:``) and pure-anchor
 (``#...``) targets are only checked syntactically — CI must not depend on
 network reachability.
 
+It also enforces reachability: every page under ``docs/`` must be reachable
+from the top-level ``README.md`` by following relative markdown links
+(transitively). A docs page nobody links to is a page nobody reads — it
+fails CI as an orphan instead of silently rotting.
+
 Usage: python scripts/check_md_links.py [root]
-Exits non-zero listing every broken link as ``file:line: target``.
+Exits non-zero listing every broken link as ``file:line: target`` and every
+orphaned docs page.
 """
 from __future__ import annotations
 
@@ -33,8 +39,13 @@ def iter_md_files(root: str):
                 yield os.path.join(dirpath, name)
 
 
-def check_file(path: str, root: str):
-    """Yield (line_no, target) for every broken relative link in one file."""
+def check_file(path: str, root: str, edges=None):
+    """Yield (line_no, target) for every broken relative link in one file.
+
+    When ``edges`` (a dict) is given, every markdown→markdown link that DOES
+    resolve is recorded as ``edges[path].add(resolved)`` — the reachability
+    graph the orphan check walks.
+    """
     in_fence = False
     with open(path, encoding="utf-8") as f:
         for line_no, line in enumerate(f, 1):
@@ -54,21 +65,47 @@ def check_file(path: str, root: str):
                     os.path.join(os.path.dirname(path), rel))
                 if not os.path.exists(resolved):
                     yield line_no, target
+                elif edges is not None and resolved.endswith(".md"):
+                    edges.setdefault(os.path.normpath(path),
+                                     set()).add(resolved)
+
+
+def find_orphans(md_files, edges, root: str):
+    """Docs pages not reachable from the top-level README via md links."""
+    start = os.path.normpath(os.path.join(root, "README.md"))
+    seen, frontier = {start}, [start]
+    while frontier:
+        for nxt in edges.get(frontier.pop(), ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                frontier.append(nxt)
+    docs_dir = os.path.normpath(os.path.join(root, "docs"))
+    return sorted(
+        os.path.relpath(p, root) for p in md_files
+        if os.path.normpath(p).startswith(docs_dir + os.sep)
+        and os.path.normpath(p) not in seen)
 
 
 def main() -> int:
     root = sys.argv[1] if len(sys.argv) > 1 else "."
     broken = []
-    n_files = 0
-    for path in iter_md_files(root):
-        n_files += 1
-        for line_no, target in check_file(path, root):
+    md_files = list(iter_md_files(root))
+    edges = {}
+    for path in md_files:
+        for line_no, target in check_file(path, root, edges):
             broken.append(f"{os.path.relpath(path, root)}:{line_no}: {target}")
+    orphans = find_orphans(md_files, edges, root)
     if broken:
         print(f"BROKEN LINKS ({len(broken)}):")
         print("\n".join(broken))
+    if orphans:
+        print(f"ORPHANED DOCS PAGES ({len(orphans)}) — not reachable from "
+              "README.md; link them from the docs index:")
+        print("\n".join(orphans))
+    if broken or orphans:
         return 1
-    print(f"ok: {n_files} markdown files, all relative links resolve")
+    print(f"ok: {len(md_files)} markdown files, all relative links resolve, "
+          "no orphaned docs pages")
     return 0
 
 

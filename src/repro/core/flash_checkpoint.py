@@ -28,13 +28,26 @@ def _flatten(state) -> Dict[str, np.ndarray]:
     return flat
 
 
-def _unflatten(like, flat: Dict[str, np.ndarray]):
+def _unflatten(like, flat: Dict[str, np.ndarray], *,
+               optional_leaves: Tuple[str, ...] = ()):
+    """Rebuild ``like``'s pytree from flat path-keyed arrays.
+
+    A leaf absent from ``flat`` raises — restoring a truncated or
+    wrong-schema blob must never silently zero state — UNLESS its keystr is
+    named in ``optional_leaves``, in which case it is filled with zeros of
+    the ``like`` leaf's shape/dtype. That is how newer blob schemas (e.g.
+    the layout stamp's ``padded_n_ps`` field) restore older checkpoints
+    that predate the field, without loosening the guard for anything else.
+    """
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in paths:
         key = jax.tree_util.keystr(path)
         if key not in flat:
-            raise KeyError(f"checkpoint missing leaf {key}")
+            if key not in optional_leaves:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            leaves.append(np.zeros(leaf.shape, leaf.dtype))
+            continue
         leaves.append(flat[key])
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -118,8 +131,15 @@ class FlashCheckpoint:
         return best
 
     def restore(self, like, step: Optional[int] = None, *,
-                shardings=None) -> Tuple[Any, int]:
-        """Restore (optionally onto new shardings — cross-mesh elastic load)."""
+                shardings=None,
+                optional_leaves: Tuple[str, ...] = ()) -> Tuple[Any, int]:
+        """Restore (optionally onto new shardings — cross-mesh elastic load).
+
+        ``optional_leaves`` names (by ``jax.tree_util.keystr``) the specific
+        leaves of ``like`` that may be absent from the blob and zero-fill —
+        the schema-evolution escape hatch; every other missing leaf still
+        raises (see ``_unflatten``).
+        """
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -130,7 +150,7 @@ class FlashCheckpoint:
             path = os.path.join(self.persist_dir, f"ckpt_{step:012d}.npz")
             with np.load(path) as z:
                 flat = {k: z[k] for k in z.files}
-        state = _unflatten(like, flat)
+        state = _unflatten(like, flat, optional_leaves=optional_leaves)
         if shardings is not None:
             state = jax.tree.map(
                 lambda leaf, sh: jax.device_put(leaf, sh) if sh is not None

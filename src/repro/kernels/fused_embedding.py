@@ -14,6 +14,19 @@ Pooled-table layout
     ``(B, T, H)`` becomes global pool rows by adding ``offsets[t]`` — after
     which the table dimension is just another axis of one big gather.
 
+Padded physical layout (unequal PS shards)
+    With ``layout`` (a ``repro.sharding.policy.PaddedLayout``) the engine
+    addresses the *padded* pool ``(n_ps * max_range, D)`` — the flattened
+    form of the ``(n_ps, max_range, D)`` store whose leading axis GSPMD
+    splits equally, placing exactly the balanced range plan on the mesh.
+    Lookups keep flowing in as **flat** pooled rows (the canonical id space
+    every planner and the hot-row contract speak); the engine translates
+    them to padded rows — ``shard * max_range + (row - shard_start)`` — on
+    both forward paths and in the backward ``segment_sum``. Padding slots
+    are never addressed, so they contribute zero to pooling and receive
+    zero gradient, and numerics are bit-identical to the flat layout (same
+    rows, same reduce order). See ``docs/EMBEDDING_LAYOUT.md``.
+
 Hot-row cache (skew-aware placement contract)
     Real sparse-feature traffic is power-law skewed: a tiny fraction of rows
     serves most lookups (RecShard / MTrainS). Under frequency-aware placement
@@ -73,7 +86,14 @@ COMBINERS = ("sum", "mean", "max")
 
 
 def table_offsets(table_rows: Sequence[int]) -> Tuple[int, ...]:
-    """Exclusive cumulative row offsets for a pooled-table layout."""
+    """Exclusive cumulative row offsets for a pooled-table layout.
+
+    Args:
+      table_rows: per-table row counts.
+
+    Returns one flat-pool start row per table; table ``t``'s local id ``i``
+    is flat pooled row ``offsets[t] + i``.
+    """
     offs, acc = [], 0
     for r in table_rows:
         offs.append(acc)
@@ -82,12 +102,28 @@ def table_offsets(table_rows: Sequence[int]) -> Tuple[int, ...]:
 
 
 def cache_slot_offsets(table_hot: Sequence[int]) -> Tuple[int, ...]:
-    """Exclusive cumulative cache-slot offsets of the per-table hot prefixes."""
+    """Exclusive cumulative cache-slot offsets of the per-table hot prefixes.
+
+    Args:
+      table_hot: per-table hot-prefix sizes (``pack_hot_ranges`` output).
+
+    Returns the cache slot where each table's hot rows begin: table ``t``'s
+    hot local id ``i < table_hot[t]`` occupies slot ``offsets[t] + i`` of the
+    ``(sum(table_hot), D)`` VMEM cache.
+    """
     return table_offsets(table_hot)
 
 
 def hot_row_ids(offsets: Sequence[int], table_hot: Sequence[int]) -> np.ndarray:
-    """Global pool row ids mirrored by the cache (per-table leading ranges)."""
+    """Flat pool row ids mirrored by the cache (per-table leading ranges).
+
+    Args:
+      offsets:   per-table flat-pool start rows (``table_offsets``).
+      table_hot: per-table hot-prefix sizes.
+
+    Returns the ``(sum(table_hot),)`` int64 ids in cache-slot order — the
+    rows to gather when materializing the cache, under any physical layout.
+    """
     parts = [np.arange(o, o + k, dtype=np.int64)
              for o, k in zip(offsets, table_hot) if k > 0]
     if not parts:
@@ -95,14 +131,59 @@ def hot_row_ids(offsets: Sequence[int], table_hot: Sequence[int]) -> np.ndarray:
     return np.concatenate(parts)
 
 
+# ---------------------------------------------------------------------------
+# flat → padded row translation (physically-unequal PS shards)
+# ---------------------------------------------------------------------------
+def translate_rows(rows: jnp.ndarray, layout) -> jnp.ndarray:
+    """Flat pooled rows → rows of the flattened padded pool (traced).
+
+    The jit-side twin of ``PaddedLayout.flat_to_padded``: finds each row's
+    shard with a ``searchsorted`` over the static shard starts (rightmost
+    match, so empty shards are never selected) and rebases it to
+    ``shard * max_range + slot``.
+
+    Args:
+      rows:   int array of flat pooled row ids (any shape).
+      layout: a ``repro.sharding.policy.PaddedLayout`` (duck-typed: only
+              ``shard_starts``, ``max_range`` and ``n_ps`` are read, keeping
+              this module free of cross-package imports).
+
+    Returns padded row ids, same shape/dtype as ``rows``.
+    """
+    starts = jnp.asarray(layout.shard_starts, rows.dtype)
+    shard = jnp.clip(jnp.searchsorted(starts, rows, side="right") - 1,
+                     0, layout.n_ps - 1)
+    return shard * layout.max_range + rows - starts[shard]
+
+
+def translate_rows_np(rows: np.ndarray, layout) -> np.ndarray:
+    """Host-side ``translate_rows`` for static plans (cache row gathers).
+
+    Delegates to ``layout.flat_to_padded`` — one implementation of the
+    subtle rightmost-match/empty-shard logic, shared with the traced twin's
+    tests, instead of a drifting copy.
+    """
+    return layout.flat_to_padded(np.asarray(rows, np.int64))
+
+
 def encode_hot_indices(idx, offsets: Sequence[int],
                        table_hot: Sequence[int]):
-    """Route each lookup: hot rows -> ``-(cache_slot+1)``, cold -> global row.
+    """Route each lookup: hot rows -> ``-(cache_slot+1)``, cold -> flat row.
 
-    ``idx`` is the (B, T, H) *global* index tensor (offsets already applied).
     Hot rows of table ``t`` are its leading local ids ``[0, table_hot[t])``
-    (the frequency-packed placement contract); their cache slots are laid out
-    contiguously per table. Returns ``(encoded, hit)``.
+    (the frequency-packed placement contract); their cache slots are laid
+    out contiguously per table. Encoding always happens in the FLAT id space
+    — under a padded physical layout the cold entries are rebased into the
+    padded space *after* this (hot detection would be meaningless on padded
+    ids, whose shard-local arithmetic destroys table locality).
+
+    Args:
+      idx:       (B, T, H) *flat* global index tensor (offsets applied).
+      offsets:   per-table flat-pool start rows (``table_offsets``).
+      table_hot: per-table hot-prefix sizes.
+
+    Returns ``(encoded, hit)``: ``encoded`` is ``idx`` with hot lookups
+    replaced by ``-(cache_slot + 1)``, ``hit`` the boolean hot mask.
     """
     off = jnp.asarray(offsets, jnp.int32)[None, :, None]
     k = jnp.asarray(table_hot, jnp.int32)[None, :, None]
@@ -299,21 +380,37 @@ def _xla_forward(pool, flat_idx, weights, *, B, T, H, combiner):
 # ---------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _fused(pool, flat_idx, weights, meta):
-    combiner, B, T, H, method, block_b, hot = meta
+    combiner, B, T, H, method, block_b, hot, layout = meta
     if method in ("pallas", "interpret"):
         if hot is not None:
             offsets, table_hot = hot
-            # the cache is sliced from `pool` *inside* the VJP-wrapped
+            # the cache is gathered from `pool` *inside* the VJP-wrapped
             # forward, so gradients through cached rows flow to the pool
-            # exactly like uncached ones (global ids are preserved)
-            cache = jnp.concatenate([
-                jax.lax.slice_in_dim(pool, o, o + k)
-                for o, k in zip(offsets, table_hot) if k > 0])
+            # exactly like uncached ones (row ids are preserved). Flat
+            # layout: the hot prefixes are contiguous, one slice per table.
+            # Padded layout: a table's prefix may straddle a shard boundary,
+            # so gather the statically-translated row ids instead.
+            if layout is None:
+                cache = jnp.concatenate([
+                    jax.lax.slice_in_dim(pool, o, o + k)
+                    for o, k in zip(offsets, table_hot) if k > 0])
+            else:
+                ids = translate_rows_np(hot_row_ids(offsets, table_hot),
+                                        layout)
+                cache = jnp.take(pool, jnp.asarray(ids), axis=0)
+            # hot detection speaks FLAT local ids (the placement contract);
+            # encode first, then rebase only the cold (non-negative) entries
+            # into the padded space
             enc, _ = encode_hot_indices(flat_idx.reshape(B, T, H),
                                         offsets, table_hot)
+            if layout is not None:
+                enc = jnp.where(enc < 0, enc,
+                                translate_rows(jnp.maximum(enc, 0), layout))
         else:
             cache = None
             enc = flat_idx.reshape(B, T, H)
+            if layout is not None:
+                enc = translate_rows(enc, layout)
         return _pallas_forward(pool, enc, weights, cache, B=B, T=T, H=H,
                                combiner=combiner, block_b=block_b,
                                interpret=(method == "interpret"))
@@ -321,7 +418,8 @@ def _fused(pool, flat_idx, weights, meta):
     # contiguous in the pool and stay hardware-cache-resident; a separate
     # cache gather would only add traffic, so the plain fused take IS the
     # cached path here (bit-identical by construction).
-    return _xla_forward(pool, flat_idx, weights, B=B, T=T, H=H,
+    idx = flat_idx if layout is None else translate_rows(flat_idx, layout)
+    return _xla_forward(pool, idx, weights, B=B, T=T, H=H,
                         combiner=combiner)
 
 
@@ -330,9 +428,13 @@ def _fused_fwd(pool, flat_idx, weights, meta):
 
 
 def _fused_bwd(meta, res, g):
-    combiner, B, T, H, method, block_b, hot = meta
+    combiner, B, T, H, method, block_b, hot, layout = meta
     pool, flat_idx, weights = res
     R, D = pool.shape
+    if layout is not None:
+        # deposit gradients into the padded row space; padding slots are
+        # never addressed, so they receive exactly zero
+        flat_idx = translate_rows(flat_idx, layout)
     g = g.astype(jnp.float32)                              # (B, T, D)
     w = None if weights is None else weights.reshape(B, T, H)
 
@@ -381,17 +483,24 @@ def fused_embedding_bag(pool: jnp.ndarray, indices: jnp.ndarray,
                         offsets: Optional[Sequence[int]] = None,
                         combiner: str = "sum", method: str = "xla",
                         block_b: int = 8,
-                        table_hot: Optional[Sequence[int]] = None) -> jnp.ndarray:
+                        table_hot: Optional[Sequence[int]] = None,
+                        layout=None) -> jnp.ndarray:
     """Pool per-table embedding bags for all tables in one fused call.
 
     Args:
-      pool:      (R, D) row-concatenation of every table.
-      indices:   (B, T, H) per-table-local (or, with ``offsets=None``, global)
-                 int rows; T tables, H lookups ("hot" axis) per bag.
+      pool:      row store for every table. Flat layout (``layout=None``):
+                 the (R, D) row-concatenation of all tables, R =
+                 ``sum(table_rows)``. Padded layout: the
+                 (n_ps * max_range, D) flattening of the physically-sharded
+                 ``(n_ps, max_range, D)`` store (padding rows zero).
+      indices:   (B, T, H) per-table-local (or, with ``offsets=None``, global
+                 flat-pool) int rows; T tables, H lookups ("hot" axis) per
+                 bag. Always expressed in the FLAT id space — the engine
+                 translates into the padded space itself.
       weights:   optional (B, T, H) per-lookup scalars, applied before the
                  combiner (so weighted mean/max match the unfused oracle).
-      offsets:   static per-table row offsets into ``pool``; ``None`` means
-                 indices are already global pool rows.
+      offsets:   static per-table flat-pool row offsets; ``None`` means
+                 indices are already global flat-pool rows.
       combiner:  "sum" | "mean" | "max".
       method:    "xla" (one take + reduce), "pallas", or "interpret".
       block_b:   batch rows per Pallas grid step.
@@ -400,13 +509,21 @@ def fused_embedding_bag(pool: jnp.ndarray, indices: jnp.ndarray,
                  from the VMEM-resident hot-row cache on the Pallas path
                  instead of an HBM DMA. Requires ``offsets`` when ``T > 1``.
                  Numerics are identical with or without it.
+      layout:    optional ``repro.sharding.policy.PaddedLayout`` describing
+                 the padded physical placement of ``pool``. Hashable and
+                 jit-static (rides in the custom-VJP meta): changing the
+                 physical layout recompiles, as a live re-plan requires.
+                 Numerics are bit-identical to the flat layout.
 
     Returns (B, T, D); gradients flow to ``pool`` (sparse scatter-add via
-    ``segment_sum``) and ``weights``.
+    ``segment_sum``, into padded rows under ``layout``) and ``weights``.
     """
     assert combiner in COMBINERS, combiner
     assert indices.ndim == 3, f"indices must be (B, T, H), got {indices.shape}"
     B, T, H = indices.shape
+    if layout is not None:
+        assert pool.shape[0] == layout.padded_rows, \
+            (pool.shape, layout.padded_rows)
     idx = indices.astype(jnp.int32)
     if offsets is not None:
         off = jnp.asarray(offsets, jnp.int32)
@@ -424,5 +541,5 @@ def fused_embedding_bag(pool: jnp.ndarray, indices: jnp.ndarray,
             hot = (offs, table_hot)
     flat_idx = idx.reshape(-1)
     w = None if weights is None else weights.astype(jnp.float32)
-    meta = (combiner, B, T, H, method, max(1, min(block_b, B)), hot)
+    meta = (combiner, B, T, H, method, max(1, min(block_b, B)), hot, layout)
     return _fused(pool, flat_idx, w, meta)

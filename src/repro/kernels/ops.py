@@ -54,27 +54,30 @@ def decode_attention(q, k_cache, v_cache, cache_pos, pos, *, window=None,
 
 def fused_embedding_bag(pool, indices, weights=None, *, offsets=None,
                         combiner="sum", impl=None, block_b=8,
-                        table_hot=None):
+                        table_hot=None, layout=None):
     """Multi-table fused embedding engine (one call for all tables).
 
-    pool (R, D) row-concatenated tables; indices (B, T, H) per-table-local
-    rows (``offsets`` = static per-table row offsets, None if already
-    global); weights (B, T, H)? -> (B, T, D). ``table_hot`` = per-table
-    counts of frequency-packed hot leading rows served from the VMEM hot-row
-    cache on the Pallas path. All impls share a custom VJP whose backward
-    scatter-adds sparse table gradients via ``segment_sum``.
+    pool (R, D) row-concatenated tables — or, with ``layout`` (a
+    ``repro.sharding.policy.PaddedLayout``), the (n_ps * max_range, D)
+    flattening of the padded physically-sharded store; indices (B, T, H)
+    per-table-local rows (``offsets`` = static per-table row offsets, None
+    if already global flat rows); weights (B, T, H)? -> (B, T, D).
+    ``table_hot`` = per-table counts of frequency-packed hot leading rows
+    served from the VMEM hot-row cache on the Pallas path. All impls share
+    a custom VJP whose backward scatter-adds sparse table gradients via
+    ``segment_sum``.
 
-    ``table_hot`` is a static compile-time plan: a live re-plan
-    (``repro.train.replan``) permutes the pool rows to the new
-    frequency-packed layout and re-enters here with the new plan — numerics
-    are identical for any plan, so old-plan checkpoints restore bit-exactly
+    ``table_hot`` and ``layout`` are static compile-time plans: a live
+    re-plan (``repro.train.replan``) permutes (and re-pads) the pool rows to
+    the new layout and re-enters here with the new plans — numerics are
+    identical for any plan, so old-plan checkpoints restore bit-exactly
     onto new ones.
     """
     impl = impl or _DEFAULT_IMPL
     from repro.kernels import fused_embedding as fe
     return fe.fused_embedding_bag(
         pool, indices, weights, offsets=offsets, combiner=combiner,
-        method=impl, block_b=block_b, table_hot=table_hot)
+        method=impl, block_b=block_b, table_hot=table_hot, layout=layout)
 
 
 def embedding_bag(table, indices, weights=None, *, combiner="sum", impl=None):

@@ -17,6 +17,12 @@ plan, and keeps training on remapped ids (bit-exact across the cut).
 
     PYTHONPATH=src python -m repro.launch.train --arch wide_deep \
         --steps 200 --zipf-alpha 1.05 --replan-every 20
+
+``--padded-shards`` additionally materializes the plan physically: the
+pooled rows are stored padded as (n_ps, max_range, D) so an equal GSPMD
+split of the leading axis IS the balanced plan (see
+docs/EMBEDDING_LAYOUT.md); re-plans re-pad onto each new plan and
+checkpoints stay flat-canonical, so --resume works across layout changes.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ from repro.core.sharding_service import HotTableTracker, ShardingService
 from repro.data.pipeline import ShardDataLoader
 from repro.data.synthetic import criteo_batch, lm_batch
 from repro.models.registry import build_model
+from repro.sharding.policy import padded_layout_for_ranges, uniform_vocab_ranges
 from repro.train import optim, replan, trainer
 
 
@@ -61,6 +68,11 @@ def main() -> None:
                     help="VMEM hot-row cache budget in pooled rows (DLRM)")
     ap.add_argument("--n-ps", type=int, default=4,
                     help="PS shard count the placement plan targets (DLRM)")
+    ap.add_argument("--padded-shards", action="store_true",
+                    help="materialize physically-unequal PS shards: store the "
+                         "pooled rows as a padded (n_ps, max_range, D) array "
+                         "so an equal GSPMD split of the leading axis places "
+                         "exactly the balanced range plan (DLRM)")
     ap.add_argument("--replan-every", type=int, default=0, metavar="N",
                     help="poll the hot tracker for a re-plan every N steps "
                          "(0 disables live re-planning)")
@@ -151,16 +163,34 @@ def train_dlrm(args) -> None:
     remapper = replan.EmbeddingRemapper(cfg.table_rows)
     table_hot = None                             # None = cfg default plan
     vocab_ranges = None                          # None = uniform striping
+    layout = None                                # None = flat pooled store
     state = None
     if args.resume and ckpt.latest_step() is not None:
-        state, step0, remapper, table_hot, vocab_ranges = \
+        state, step0, remapper, table_hot, vocab_ranges, layout = \
             replan.restore_with_layout(cfg, opt, ckpt)
         print(f"resumed from step {step0} "
-              f"(layout-stamped; cache plan {'measured' if table_hot else 'default'})")
+              f"(layout-stamped; cache plan {'measured' if table_hot else 'default'}; "
+              f"{'padded ' + str(layout.n_ps) + '-shard' if layout else 'flat'} pool)")
+    if args.padded_shards and layout is None:
+        # fresh padded job (or a flat-era checkpoint upgraded in place):
+        # physical shards follow the applied plan, uniform until one exists
+        layout = padded_layout_for_ranges(
+            vocab_ranges if vocab_ranges is not None
+            else uniform_vocab_ranges(cfg.total_embedding_rows, args.n_ps))
+        if state is not None:
+            state = replan.pad_train_state(
+                state, cfg.total_embedding_rows, layout)
     if state is None:
-        state = trainer.make_dlrm_train_state(cfg, opt, jax.random.PRNGKey(0))
+        state = trainer.make_dlrm_train_state(cfg, opt, jax.random.PRNGKey(0),
+                                              layout=layout)
+    if layout is not None:
+        print(f"padded PS shards: n_ps={layout.n_ps} "
+              f"max_range={layout.max_range} physical rows/shard="
+              f"{list(layout.shard_sizes)} "
+              f"(+{layout.padded_rows - cfg.total_embedding_rows} pad rows)")
     step_fn = jax.jit(trainer.make_dlrm_train_step(
-        cfg, opt, grad_compress=args.grad_compress, table_hot=table_hot))
+        cfg, opt, grad_compress=args.grad_compress, table_hot=table_hot,
+        layout=layout))
 
     tracker = HotTableTracker(
         cfg.table_rows, n_ps=args.n_ps, hot_budget=cfg.hot_rows_k,
@@ -194,31 +224,37 @@ def train_dlrm(args) -> None:
                 # crash mid-replan loses nothing; apply_replan itself then
                 # permutes, re-plans placement, and recompiles
                 replan.save_with_layout(ckpt, state, int(state["step"]),
-                                        remapper, table_hot, vocab_ranges)
+                                        remapper, table_hot, vocab_ranges,
+                                        layout=layout)
                 res = replan.apply_replan(state, cfg, opt, decision,
                                           remapper=remapper, opt_name=opt_name,
-                                          grad_compress=args.grad_compress)
+                                          grad_compress=args.grad_compress,
+                                          layout=layout)
                 tracker.mark_applied(decision)
-                state, step_fn = res.state, res.step_fn
+                state, step_fn, layout = res.state, res.step_fn, res.layout
                 table_hot = decision.table_hot
                 vocab_ranges = decision.vocab_ranges
                 replanned = True
                 print(f"step {n:5d} RE-PLAN: imbalance "
                       f"{decision.imbalance_before:.3f} -> "
                       f"{decision.imbalance_after:.3f}, "
-                      f"cache rows {sum(decision.table_hot)}")
+                      f"cache rows {sum(decision.table_hot)}"
+                      + (f", physical rows/shard {list(layout.shard_sizes)}"
+                         if layout is not None else ""))
         if args.ckpt_dir and n % args.ckpt_every == 0 and not replanned:
             # key by the GLOBAL step so resumed runs sort above their
             # pre-resume checkpoints (n restarts at 0 on every process)
             replan.save_with_layout(ckpt, state, int(state["step"]),
-                                    remapper, table_hot, vocab_ranges)
+                                    remapper, table_hot, vocab_ranges,
+                                    layout=layout)
     ok, covered, dup = svc.coverage(0)
     print(f"done: {n} steps, exactly-once={ok} (covered={covered} dup={dup}), "
           f"{tracker.n_replans} re-plan(s), final imbalance "
           f"{tracker.imbalance():.3f}")
     if args.ckpt_dir:
         replan.save_with_layout(ckpt, state, int(state["step"]),
-                                remapper, table_hot, vocab_ranges)
+                                remapper, table_hot, vocab_ranges,
+                                layout=layout)
         ckpt.wait()
         print(f"checkpointed at step {n} -> {args.ckpt_dir}")
 

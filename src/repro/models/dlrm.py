@@ -10,6 +10,12 @@ the deep part (plus one for the wide part in wide_deep) instead of a Python
 loop of per-table kernels. The pooled rows are sharded over the "model"
 (parameter-server) axis, exactly as §2.1 describes — one spec covers every
 table.
+
+With a ``layout`` (a ``repro.sharding.policy.PaddedLayout``) the pooled
+store is instead the padded ``(n_ps, max_range, D)`` array whose leading
+axis GSPMD splits equally — physically-unequal PS shards materializing the
+balanced range plan exactly (see ``docs/EMBEDDING_LAYOUT.md``). Values are
+identical to the flat layout bit for bit; only where rows live changes.
 """
 from __future__ import annotations
 
@@ -24,7 +30,18 @@ from repro.models.common import KeyGen, dense_init
 from repro.sharding.policy import constrain
 
 
-def init_dlrm(cfg: DLRMConfig, key) -> Dict[str, Any]:
+def init_dlrm(cfg: DLRMConfig, key, layout=None) -> Dict[str, Any]:
+    """Initialize DLRM params; ``layout`` pads the pooled stores physically.
+
+    Args:
+      cfg:    the DLRM workload config.
+      key:    PRNG key.
+      layout: optional ``PaddedLayout``; the pooled row arrays ("tables" and
+              the wide part) come back as ``(n_ps, max_range, ...)`` padded
+              stores holding bit-identical row values to the flat init (the
+              flat pool is drawn first, then scattered), so flat and padded
+              jobs from the same key are numerically indistinguishable.
+    """
     kg = KeyGen(key)
     D = cfg.embed_dim
     # one pooled row array for all tables (rows laid out at cfg.table_offsets)
@@ -64,12 +81,26 @@ def init_dlrm(cfg: DLRMConfig, key) -> Dict[str, Any]:
         cin["w_out"] = dense_init(kg(), (sum(cfg.cin_layers),), sum(cfg.cin_layers),
                                   jnp.float32)
         params["cin"] = cin
+    if layout is not None:
+        # pad AFTER drawing every key so flat/padded inits are value-equal
+        params["tables"] = layout.pad_rows(params["tables"])
+        if "wide" in params:
+            params["wide"] = layout.pad_rows(params["wide"])
     return params
 
 
-def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
+def dlrm_param_specs(cfg: DLRMConfig, layout=None) -> Dict[str, Any]:
+    """Logical-axis spec tree for ``init_dlrm``'s params.
+
+    Args:
+      cfg:    the DLRM workload config.
+      layout: optional ``PaddedLayout``; padded pooled stores shard their
+              *leading* (n_ps) axis over the PS/model axis — an equal split
+              of n_ps shards, i.e. exactly one balanced range per device.
+    """
+    pooled = ("vocab", None, None) if layout is not None else ("vocab", None)
     specs: Dict[str, Any] = {
-        "tables": ("vocab", None),      # pooled rows over the PS/model axis
+        "tables": pooled,               # pooled rows over the PS/model axis
         "mlp": {},
     }
     for li, h in enumerate(cfg.mlp_dims):
@@ -78,7 +109,8 @@ def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
     specs["mlp"]["w_out"] = (None, None)
     specs["mlp"]["b_out"] = (None,)
     if cfg.kind == "wide_deep":
-        specs["wide"] = ("vocab", None)
+        specs["wide"] = ("vocab", None, None) if layout is not None \
+            else ("vocab", None)
         specs["wide_dense"] = (None,)
     if cfg.kind == "dcn":
         specs["cross"] = {f"w{li}": (None,) for li in range(cfg.cross_layers)}
@@ -89,11 +121,20 @@ def dlrm_param_specs(cfg: DLRMConfig) -> Dict[str, Any]:
     return specs
 
 
-def _field_embeddings(params, batch, cfg: DLRMConfig, table_hot=None):
+def _pool2d(store, layout):
+    """Padded (n_ps, max_range, ...) store → the engine's flattened view."""
+    if layout is None:
+        return store
+    return store.reshape((layout.padded_rows,) + store.shape[2:])
+
+
+def _field_embeddings(params, batch, cfg: DLRMConfig, table_hot=None,
+                      layout=None):
     """All per-field embeddings in ONE fused call. -> (B, n_tables, D)."""
     return ops.fused_embedding_bag(
-        params["tables"], batch["sparse"], offsets=cfg.table_offsets,
-        combiner=cfg.pooling, table_hot=table_hot)
+        _pool2d(params["tables"], layout), batch["sparse"],
+        offsets=cfg.table_offsets, combiner=cfg.pooling,
+        table_hot=table_hot, layout=layout)
 
 
 def _deep_mlp(params, x, cfg: DLRMConfig):
@@ -103,17 +144,21 @@ def _deep_mlp(params, x, cfg: DLRMConfig):
     return (h @ params["mlp"]["w_out"] + params["mlp"]["b_out"])[:, 0]
 
 
-def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
+def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None,
+                 layout=None) -> jnp.ndarray:
     """batch: {dense (B,n_dense) f32, sparse (B,m,hot) i32} -> logit (B,).
 
     ``table_hot`` overrides the per-table hot-row cache prefixes for the
     fused embedding engine (defaults to ``cfg.table_hot``, i.e. the
     ``cfg.hot_rows_k`` budget split across tables; frequency-aware jobs pass
     a measured plan from ``ParameterPlacementService.hot_plan``).
+    ``layout`` declares ``params``' pooled stores padded
+    (``(n_ps, max_range, ...)``, see ``init_dlrm``); sparse ids stay in the
+    flat space — translation happens inside the fused engine.
     """
     if table_hot is None:
         table_hot = cfg.table_hot
-    emb = _field_embeddings(params, batch, cfg, table_hot)  # (B, m, D)
+    emb = _field_embeddings(params, batch, cfg, table_hot, layout)  # (B, m, D)
     emb = constrain(emb, ("batch", None, None))
     B = emb.shape[0]
     x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
@@ -121,8 +166,9 @@ def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
     if cfg.kind == "wide_deep":
         deep = _deep_mlp(params, x0, cfg)
         wide_emb = ops.fused_embedding_bag(
-            params["wide"], batch["sparse"], offsets=cfg.table_offsets,
-            combiner="sum", table_hot=table_hot)             # (B, m, 1)
+            _pool2d(params["wide"], layout), batch["sparse"],
+            offsets=cfg.table_offsets, combiner="sum",
+            table_hot=table_hot, layout=layout)              # (B, m, 1)
         wide = batch["dense"] @ params["wide_dense"] + jnp.sum(
             wide_emb[..., 0], axis=1)
         return deep + wide
@@ -148,20 +194,25 @@ def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
     raise ValueError(cfg.kind)
 
 
-def dlrm_loss(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
+def dlrm_loss(params, batch, cfg: DLRMConfig, table_hot=None,
+              layout=None) -> jnp.ndarray:
     """Binary cross-entropy with logits on CTR labels.
 
-    ``table_hot`` is forwarded to ``dlrm_forward`` so a live re-plan's
-    measured cache plan reaches the fused engine (None = ``cfg.table_hot``).
+    ``table_hot`` and ``layout`` are forwarded to ``dlrm_forward`` so a live
+    re-plan's measured cache plan and the physical padded placement reach
+    the fused engine (None = ``cfg.table_hot`` / flat layout).
     """
-    logit = dlrm_forward(params, batch, cfg, table_hot=table_hot)
+    logit = dlrm_forward(params, batch, cfg, table_hot=table_hot,
+                         layout=layout)
     y = batch["label"].astype(jnp.float32)
     return jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
 
 
-def dlrm_auc(params, batch, cfg: DLRMConfig, table_hot=None) -> jnp.ndarray:
+def dlrm_auc(params, batch, cfg: DLRMConfig, table_hot=None,
+             layout=None) -> jnp.ndarray:
     """Pairwise AUC estimate on one batch (for Fig 8 convergence tracking)."""
-    logit = dlrm_forward(params, batch, cfg, table_hot=table_hot)
+    logit = dlrm_forward(params, batch, cfg, table_hot=table_hot,
+                         layout=layout)
     y = batch["label"].astype(jnp.float32)
     pos = y[:, None] > y[None, :]
     gt = (logit[:, None] > logit[None, :]).astype(jnp.float32)

@@ -402,6 +402,177 @@ def balanced_vocab_ranges(counts: np.ndarray,
     return [(int(edges[i]), int(edges[i + 1])) for i in range(n_shards)]
 
 
+# ---------------------------------------------------------------------------
+# Padded physical PS shards: make the balanced plan what GSPMD places
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PaddedLayout:
+    """Physical padded ``(n_ps, max_range, D)`` placement of a range plan.
+
+    GSPMD ``NamedSharding``s can only express *equal* splits of an array
+    axis, so a flat ``(sum(rows), D)`` pool sharded over the PS axis always
+    materializes uniform striping — a balanced ``vocab_ranges`` plan riding
+    on the policy stays advisory. This layout makes the plan physical:
+    shard ``p`` owns exactly ``ranges[p]``'s rows, stored at
+    ``padded[p, 0:size_p]`` and tail-padded with zero rows to ``max_range``.
+    A ``NamedSharding`` of ``P("model", None, None)`` over the leading axis
+    then places *exactly* the balanced plan on the mesh — physically-unequal
+    PS shards via an equal split of the padded leading axis.
+
+    Addressing: a flat pooled row ``g`` in ``ranges[p] = (start, end)``
+    lives at shard ``p``, slot ``g - start``; equivalently at *padded row*
+    ``p * max_range + (g - start)`` of the ``(n_ps * max_range, D)`` reshape
+    the fused embedding engine consumes. Padded slots hold zeros, are never
+    addressed by a translated index, and therefore contribute nothing to
+    pooling and receive zero gradient.
+
+    The dataclass is frozen and tuple-only, hence hashable — it rides in
+    jit-static metadata (``fused_embedding_bag``'s custom-VJP meta) and
+    recompiles the step exactly when the physical layout changes.
+    """
+    ranges: Tuple[Tuple[int, int], ...]
+
+    # -- static geometry ----------------------------------------------------
+    @property
+    def n_ps(self) -> int:
+        """PS shard count (leading axis of the padded pool)."""
+        return len(self.ranges)
+
+    @property
+    def max_range(self) -> int:
+        """Rows per physical shard (the largest range, floor 1)."""
+        return max(1, max(e - s for s, e in self.ranges))
+
+    @property
+    def total_rows(self) -> int:
+        """Real pooled rows covered (``sum(table_rows)`` of the job)."""
+        return self.ranges[-1][1]
+
+    @property
+    def padded_rows(self) -> int:
+        """Rows of the ``(n_ps * max_range, D)`` flattened padded pool."""
+        return self.n_ps * self.max_range
+
+    @property
+    def shard_starts(self) -> Tuple[int, ...]:
+        """Flat pooled row where each shard's range begins."""
+        return tuple(s for s, _ in self.ranges)
+
+    @property
+    def shard_sizes(self) -> Tuple[int, ...]:
+        """Real (unpadded) rows each shard physically owns."""
+        return tuple(e - s for s, e in self.ranges)
+
+    # -- row translation ----------------------------------------------------
+    def shard_slot(self, rows) -> Tuple[np.ndarray, np.ndarray]:
+        """Flat pooled rows → ``(shard, slot)`` coordinates.
+
+        Args:
+          rows: int array-like of flat pooled row ids in ``[0, total_rows)``.
+
+        Returns ``(shard, slot)`` int64 arrays: ``padded[shard, slot]`` holds
+        each row. Empty shards are never selected (their start equals the
+        next shard's, and the rightmost match wins).
+        """
+        rows = np.asarray(rows, np.int64)
+        starts = np.asarray(self.shard_starts, np.int64)
+        shard = np.clip(np.searchsorted(starts, rows, side="right") - 1,
+                        0, self.n_ps - 1)
+        return shard, rows - starts[shard]
+
+    def flat_to_padded(self, rows) -> np.ndarray:
+        """Flat pooled rows → rows of the flattened padded pool.
+
+        ``flat_to_padded(g) == shard * max_range + slot``; the inverse of
+        ``padded_to_flat`` on real (non-padding) rows.
+        """
+        shard, slot = self.shard_slot(rows)
+        return shard * self.max_range + slot
+
+    def padded_to_flat(self, padded) -> np.ndarray:
+        """Rows of the flattened padded pool → flat pooled rows.
+
+        Args:
+          padded: int array-like of padded row ids; callers must only pass
+                  real rows (``padding_mask`` is True), padding slots map
+                  onto whatever flat row the arithmetic lands on.
+        """
+        padded = np.asarray(padded, np.int64)
+        shard, slot = padded // self.max_range, padded % self.max_range
+        starts = np.asarray(self.shard_starts, np.int64)
+        return starts[shard] + slot
+
+    def row_translation(self) -> np.ndarray:
+        """The full ``(total_rows,)`` flat → padded row map (int64).
+
+        Memoized on the instance (read-only array): pad/unpad walk several
+        pooled leaves per checkpoint or re-plan, and the map is O(rows) to
+        build — compute it once per layout, not once per leaf. The cache
+        rides outside the dataclass fields, so eq/hash are untouched.
+        """
+        cached = self.__dict__.get("_row_translation")
+        if cached is None:
+            cached = self.flat_to_padded(
+                np.arange(self.total_rows, dtype=np.int64))
+            cached.setflags(write=False)
+            object.__setattr__(self, "_row_translation", cached)
+        return cached
+
+    def padding_mask(self) -> np.ndarray:
+        """(n_ps, max_range) bool mask; True where a real row lives.
+
+        ``mask.sum(axis=1)`` equals ``shard_sizes`` — the materialized
+        per-shard row counts the Fig 12 bench checks against the plan.
+        """
+        sizes = np.asarray(self.shard_sizes, np.int64)[:, None]
+        return np.arange(self.max_range, dtype=np.int64)[None, :] < sizes
+
+    # -- array movement -----------------------------------------------------
+    def pad_rows(self, flat):
+        """(total_rows, ...) flat row array → (n_ps, max_range, ...) padded.
+
+        Real rows are scattered to their (shard, slot); padding slots are
+        zeros. Values move, never change — the round trip through
+        ``unpad_rows`` is bit-exact.
+        """
+        import jax.numpy as jnp
+        flat = jnp.asarray(flat)
+        assert flat.shape[0] == self.total_rows, (flat.shape, self.total_rows)
+        out = jnp.zeros((self.padded_rows,) + flat.shape[1:], flat.dtype)
+        out = out.at[jnp.asarray(self.row_translation())].set(flat)
+        return out.reshape((self.n_ps, self.max_range) + flat.shape[1:])
+
+    def unpad_rows(self, padded):
+        """(n_ps, max_range, ...) padded row array → (total_rows, ...) flat."""
+        import jax.numpy as jnp
+        padded = jnp.asarray(padded)
+        assert padded.shape[:2] == (self.n_ps, self.max_range), padded.shape
+        flat2d = padded.reshape((self.padded_rows,) + padded.shape[2:])
+        return jnp.take(flat2d, jnp.asarray(self.row_translation()), axis=0)
+
+
+def padded_layout_for_ranges(
+        ranges: Sequence[Tuple[int, int]]) -> PaddedLayout:
+    """Plan the physical padded pool layout for a contiguous range plan.
+
+    Args:
+      ranges: one half-open ``(start, end)`` flat pooled-row range per PS
+              shard, contiguous from 0 (``balanced_vocab_ranges`` /
+              ``uniform_vocab_ranges`` output, or a ``ReplanDecision``'s
+              ``vocab_ranges``). Empty ranges are allowed — that shard is
+              a fully-padded tail of zeros.
+
+    Returns the validated ``PaddedLayout``.
+    """
+    rs = tuple((int(s), int(e)) for s, e in ranges)
+    assert rs, "at least one shard range required"
+    assert rs[0][0] == 0, f"ranges must start at 0, got {rs[0]}"
+    for (s, e), (s2, _) in zip(rs, rs[1:]):
+        assert e >= s and s2 == e, f"ranges must be contiguous: {rs}"
+    assert rs[-1][1] >= rs[-1][0], rs[-1]
+    return PaddedLayout(ranges=rs)
+
+
 def placement_imbalance(counts: np.ndarray,
                         ranges: Sequence[Tuple[int, int]]) -> float:
     """max/mean per-shard access mass (1.0 = perfectly balanced).

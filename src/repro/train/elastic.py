@@ -6,10 +6,13 @@ mesh-agnostic host arrays; this module rebuilds shardings for the *new* mesh
 seamless worker/PS count change without re-partitioning logic in user code.
 
 ``resume_dlrm_on_mesh`` is the same substrate for the paper's own DLRM
-workloads, with one extra degree of freedom: an optional ``ReplanDecision``
+workloads, with two extra degrees of freedom: an optional ``ReplanDecision``
 from the live re-planning loop, applied as a bit-exact pooled-row
 permutation after restore — so a checkpoint written under the OLD placement
-plan resumes under the NEW one (see ``repro.train.replan``).
+plan resumes under the NEW one (see ``repro.train.replan``) — and optional
+``from_layout``/``layout`` padded physical layouts, so a job checkpointed
+with ``n_ps`` physically-unequal PS shards resumes onto a different shard
+count (or back to the flat pool) bit-exactly.
 """
 from __future__ import annotations
 
@@ -53,17 +56,30 @@ def resume_on_mesh(api: ModelAPI, optimizer: Optimizer, opt_name: str,
 
 # --- DLRM (paper workloads) -------------------------------------------------
 def dlrm_state_shardings(cfg: DLRMConfig, opt_name: str,
-                         policy: ShardingPolicy):
-    """NamedShardings for the full DLRM train state under a policy."""
-    specs = trainer_mod.dlrm_train_state_specs(cfg, opt_name)
+                         policy: ShardingPolicy, layout=None):
+    """NamedShardings for the full DLRM train state under a policy.
+
+    ``layout`` (a ``PaddedLayout``) switches the pooled-store specs to the
+    padded ``(n_ps, max_range, ...)`` form, whose leading axis the "vocab"
+    rule splits equally — one balanced range per PS device.
+    """
+    specs = trainer_mod.dlrm_train_state_specs(cfg, opt_name, layout=layout)
     return logical_spec(None, specs, policy)
 
 
 def resume_dlrm_on_mesh(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
                         ckpt: FlashCheckpoint, mesh, *,
-                        decision=None, step: Optional[int] = None
+                        decision=None, step: Optional[int] = None,
+                        from_layout=None, layout=None
                         ) -> Tuple[Dict[str, Any], int, ShardingPolicy]:
     """Restore a DLRM checkpoint onto a mesh and (optionally) a new row plan.
+
+    The layout degrees of freedom make this the "resume onto a different
+    PS count" path for physically-padded jobs: a blob saved padded on
+    ``from_layout`` (say 4 shards) restores bit-exactly onto ``layout``
+    (say 2 shards, or flat) — the checkpointed rows are re-based through
+    the canonical flat space, so any (from_layout, layout) pair composes,
+    including with a ``ReplanDecision`` permutation in between.
 
     Args:
       cfg, optimizer, opt_name: the job being resumed.
@@ -73,20 +89,33 @@ def resume_dlrm_on_mesh(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
                 the restored pooled rows (bit-exact) and its balanced
                 ``vocab_ranges`` ride on the returned policy.
       step:     checkpoint step (None = latest).
+      from_layout: the ``PaddedLayout`` the blob was *saved* on (None =
+                saved flat). Plain ``ckpt.save`` blobs store whatever layout
+                the live state had, so the caller must say which.
+      layout:   the ``PaddedLayout`` to resume *onto* (None = flat). The
+                caller compiles its step with the same ``layout``.
 
     Returns ``(state, restored_step, policy)``; the caller recompiles its
-    train step with ``table_hot=decision.table_hot`` to finish the re-plan.
+    train step with ``table_hot=decision.table_hot`` (and ``layout``) to
+    finish the re-plan.
     """
+    from repro.train.replan import (pad_train_state, permute_train_state,
+                                    unpad_train_state)
+    R = cfg.total_embedding_rows
     ranges = None if decision is None else decision.vocab_ranges
     policy = make_dlrm_policy(mesh, vocab_ranges=ranges)
     like = jax.eval_shape(
-        lambda k: trainer_mod.make_dlrm_train_state(cfg, optimizer, k),
+        lambda k: trainer_mod.make_dlrm_train_state(cfg, optimizer, k,
+                                                    layout=from_layout),
         jax.random.PRNGKey(0))
-    shardings = dlrm_state_shardings(cfg, opt_name, policy) \
-        if mesh is not None else None
-    state, restored_step = ckpt.restore(like, step, shardings=shardings)
+    state, restored_step = ckpt.restore(like, step)
+    if from_layout is not None:
+        state = unpad_train_state(state, R, from_layout)
     if decision is not None:
-        from repro.train.replan import permute_train_state
-        state = permute_train_state(state, cfg.total_embedding_rows,
-                                    decision.permutation)
+        state = permute_train_state(state, R, decision.permutation)
+    if layout is not None:
+        state = pad_train_state(state, R, layout)
+    if mesh is not None:
+        state = jax.device_put(
+            state, dlrm_state_shardings(cfg, opt_name, policy, layout=layout))
     return state, restored_step, policy

@@ -25,6 +25,17 @@ per-row contributions in the same flat order — so the resumed step's forward
 loss equals the pre-replan checkpoint's to the last ulp (test_replan.py
 asserts this), and an OLD-plan checkpoint restores losslessly onto a NEW
 plan via ``restore_on_plan`` / ``elastic.resume_dlrm_on_mesh``.
+
+Padded physical shards ride the same loop: on a job running the
+``(n_ps, max_range, D)`` padded pool (``--padded-shards``), a re-plan's new
+balanced ranges imply a new *physical* layout, so ``apply_replan`` unpads
+the state to the canonical flat row space, permutes there, and re-pads onto
+``padded_layout_for_ranges(decision.vocab_ranges)`` — GSPMD then
+materializes exactly the new plan. ``pad_train_state`` /
+``unpad_train_state`` are the bit-exact movers; checkpoints always store
+the flat order (see ``save_with_layout``), making every blob restorable
+onto any layout and shard count. ``docs/EMBEDDING_LAYOUT.md`` is the
+authoritative walkthrough of the id spaces and their lifecycles.
 """
 from __future__ import annotations
 
@@ -39,7 +50,10 @@ from repro.configs.dlrm_models import DLRMConfig
 from repro.core.flash_checkpoint import FlashCheckpoint
 from repro.core.sharding_service import ReplanDecision
 from repro.kernels.fused_embedding import table_offsets
-from repro.sharding.policy import ShardingPolicy, make_dlrm_policy
+from repro.sharding.policy import (
+    PaddedLayout, ShardingPolicy, make_dlrm_policy, padded_layout_for_ranges,
+    uniform_vocab_ranges,
+)
 from repro.train import elastic
 from repro.train import trainer as trainer_mod
 from repro.train.optim import Optimizer
@@ -63,7 +77,15 @@ class EmbeddingRemapper:
         self.n_plans = 0
 
     def compose(self, permutation: np.ndarray) -> None:
-        """Fold one applied re-plan's layout permutation into the remap."""
+        """Fold one applied re-plan's layout permutation into the remap.
+
+        Args:
+          permutation: ``(total_rows,)`` flat-row map of the applied
+                       ``ReplanDecision`` (``perm[old_row] = new_row``).
+                       Always expressed in the canonical FLAT space — padded
+                       jobs compose the same permutations, since padding is
+                       a placement of the flat order, not a reordering.
+        """
         self.map = np.asarray(permutation, np.int64)[self.map]
         self.n_plans += 1
 
@@ -72,6 +94,11 @@ class EmbeddingRemapper:
 
         Permutations never cross table boundaries, so the result is again a
         valid per-table-local id tensor (same dtype as the input).
+
+        Args:
+          sparse: (B, T, H) raw per-table-local int ids from the stream.
+
+        Returns the remapped (B, T, H) local ids under the current layout.
         """
         sparse = np.asarray(sparse)
         g = sparse.astype(np.int64) + self.offsets[None, :, None]
@@ -114,6 +141,67 @@ def permute_train_state(state, total_rows: int, permutation: np.ndarray):
     return jax.tree_util.tree_map_with_path(visit, state)
 
 
+def _map_pooled_leaves(state, match, move):
+    """Apply ``move`` to every pooled-row leaf of a DLRM train state.
+
+    Shared walker for pad/unpad: a leaf qualifies when its path carries a
+    ``tables``/``wide`` dict key AND ``match(leaf)`` accepts its shape —
+    params and their optimizer-state mirrors (adagrad accumulators, adam
+    moments) alike. Everything else passes through untouched.
+    """
+    def visit(path, leaf):
+        keys = {p.key for p in path if isinstance(p, jax.tree_util.DictKey)}
+        if ({"tables", "wide"} & keys) and match(leaf):
+            return move(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, state)
+
+
+def pad_train_state(state, total_rows: int, layout: PaddedLayout):
+    """Flat-layout DLRM train state → padded physical layout.
+
+    Every pooled-row leaf — ``params["tables"]``, the wide part, their
+    optimizer moments — of shape ``(total_rows, ...)`` is scattered to
+    ``(n_ps, max_range, ...)`` per ``layout`` (padding slots zero). Values
+    move, never change: ``unpad_train_state`` inverts this bit-exactly.
+
+    Args:
+      state:      {params, opt, step} pytree on the flat layout.
+      total_rows: ``cfg.total_embedding_rows`` of the job.
+      layout:     target physical layout.
+
+    Returns the padded state pytree.
+    """
+    return _map_pooled_leaves(
+        state,
+        lambda leaf: getattr(leaf, "ndim", 0) >= 1
+        and leaf.shape[0] == total_rows,
+        layout.pad_rows)
+
+
+def unpad_train_state(state, total_rows: int, layout: PaddedLayout):
+    """Padded-layout DLRM train state → the canonical flat layout.
+
+    Inverse of ``pad_train_state``: gathers the real rows of every
+    ``(n_ps, max_range, ...)`` pooled leaf back into ``(total_rows, ...)``
+    order, dropping the padding. Bit-exact.
+
+    Args:
+      state:      {params, opt, step} pytree on ``layout``.
+      total_rows: ``cfg.total_embedding_rows`` of the job.
+      layout:     the layout ``state`` currently lives on.
+
+    Returns the flat state pytree.
+    """
+    del total_rows  # shape is implied by the layout; kept for symmetry
+    return _map_pooled_leaves(
+        state,
+        lambda leaf: getattr(leaf, "ndim", 0) >= 2
+        and leaf.shape[:2] == (layout.n_ps, layout.max_range),
+        layout.unpad_rows)
+
+
 @dataclass
 class ReplanResult:
     """Everything the training loop swaps in after an applied re-plan."""
@@ -121,13 +209,15 @@ class ReplanResult:
     step_fn: Callable                       # recompiled with the new table_hot
     policy: ShardingPolicy                  # carries the balanced vocab ranges
     decision: ReplanDecision
+    layout: Optional[PaddedLayout] = None   # physical layout of `state`
 
 
 def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
                  decision: ReplanDecision, *,
                  remapper: Optional[EmbeddingRemapper] = None,
                  mesh=None, opt_name: str = "adagrad",
-                 grad_compress: bool = False) -> ReplanResult:
+                 grad_compress: bool = False,
+                 layout: Optional[PaddedLayout] = None) -> ReplanResult:
     """Execute one live re-plan on a running job's state.
 
     The seamless-migration recipe of §5.2 applied to row placement: permute
@@ -142,8 +232,16 @@ def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
     pre-compose map) — ``restore_on_plan`` then resumes it onto the new
     plan bit-exactly; a single blob schema, no format ambiguity.
 
+    On a padded job (``layout`` given), the new balanced ranges imply a NEW
+    physical layout (different shard boundaries, possibly a different
+    ``max_range``): the state is unpadded to the canonical flat space,
+    permuted there, and re-padded onto the layout planned from
+    ``decision.vocab_ranges`` — so the compiled shards materialize exactly
+    the new plan. Still bit-exact end to end.
+
     Args:
-      state:     live {params, opt, step} pytree (old layout).
+      state:     live {params, opt, step} pytree (old layout; padded on
+                 ``layout`` when one is given).
       cfg:       the DLRM job config.
       optimizer: the job's optimizer (for the recompiled step).
       decision:  an accepted ``HotTableTracker.maybe_replan`` decision.
@@ -152,29 +250,39 @@ def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
                  the new policy's shardings.
       opt_name:  optimizer name for state specs ("adagrad", "adam", ...).
       grad_compress: forwarded to the recompiled train step.
+      layout:    the padded physical layout ``state`` currently lives on
+                 (None = flat). Padded jobs come back padded on the NEW
+                 layout (``result.layout``).
 
     Returns a ``ReplanResult``; training continues with ``result.state`` and
     ``result.step_fn`` on remapped batches.
     """
-    new_state = permute_train_state(state, cfg.total_embedding_rows,
-                                    decision.permutation)
+    R = cfg.total_embedding_rows
+    flat_state = state if layout is None else \
+        unpad_train_state(state, R, layout)
+    new_state = permute_train_state(flat_state, R, decision.permutation)
+    new_layout = None
+    if layout is not None:
+        new_layout = padded_layout_for_ranges(decision.vocab_ranges)
+        new_state = pad_train_state(new_state, R, new_layout)
     if remapper is not None:
         remapper.compose(decision.permutation)
     policy = make_dlrm_policy(mesh, vocab_ranges=decision.vocab_ranges)
     if mesh is not None:
-        shardings = elastic.dlrm_state_shardings(cfg, opt_name, policy)
+        shardings = elastic.dlrm_state_shardings(cfg, opt_name, policy,
+                                                 layout=new_layout)
         new_state = jax.device_put(new_state, shardings)
     step_fn = jax.jit(trainer_mod.make_dlrm_train_step(
         cfg, optimizer, grad_compress=grad_compress,
-        table_hot=decision.table_hot))
+        table_hot=decision.table_hot, layout=new_layout))
     return ReplanResult(state=new_state, step_fn=step_fn, policy=policy,
-                        decision=decision)
+                        decision=decision, layout=new_layout)
 
 
 def restore_on_plan(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
                     ckpt: FlashCheckpoint, decision: ReplanDecision, *,
                     mesh=None, step: Optional[int] = None,
-                    grad_compress: bool = False
+                    grad_compress: bool = False, padded: bool = False
                     ) -> Tuple[Dict[str, Any], int, Callable, ShardingPolicy,
                                EmbeddingRemapper]:
     """Restore an OLD-plan layout-stamped checkpoint onto a NEW plan.
@@ -193,21 +301,35 @@ def restore_on_plan(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
       mesh:     optional target mesh.
       step:     checkpoint step (None = latest).
       grad_compress: forwarded to the recompiled train step.
+      padded:   materialize the new plan physically — the returned state is
+                padded onto ``padded_layout_for_ranges(decision.vocab_ranges)``
+                and ``step_fn`` is compiled for it. A checkpoint stamped
+                padded implies this automatically (a padded job stays
+                padded across restarts).
 
-    Returns ``(state, restored_step, step_fn, policy, remapper)``.
+    Returns ``(state, restored_step, step_fn, policy, remapper)``; when
+    padded, rebuild the layout with
+    ``padded_layout_for_ranges(decision.vocab_ranges)``.
     """
-    state, restored_step, remapper, _old_hot, _old_ranges = \
+    R = cfg.total_embedding_rows
+    state, restored_step, remapper, _old_hot, _old_ranges, old_layout = \
         restore_with_layout(cfg, optimizer, ckpt, step=step)
-    state = permute_train_state(state, cfg.total_embedding_rows,
-                                decision.permutation)
+    if old_layout is not None:      # stamped padded: back to flat to permute
+        state = unpad_train_state(state, R, old_layout)
+    state = permute_train_state(state, R, decision.permutation)
+    new_layout = None
+    if padded or old_layout is not None:
+        new_layout = padded_layout_for_ranges(decision.vocab_ranges)
+        state = pad_train_state(state, R, new_layout)
     remapper.compose(decision.permutation)
     policy = make_dlrm_policy(mesh, vocab_ranges=decision.vocab_ranges)
     if mesh is not None:
         state = jax.device_put(
-            state, elastic.dlrm_state_shardings(cfg, opt_name, policy))
+            state, elastic.dlrm_state_shardings(cfg, opt_name, policy,
+                                                layout=new_layout))
     step_fn = jax.jit(trainer_mod.make_dlrm_train_step(
         cfg, optimizer, grad_compress=grad_compress,
-        table_hot=decision.table_hot))
+        table_hot=decision.table_hot, layout=new_layout))
     return state, restored_step, step_fn, policy, remapper
 
 
@@ -215,8 +337,8 @@ def restore_on_plan(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
 def save_with_layout(ckpt: FlashCheckpoint, state, step: int,
                      remapper: EmbeddingRemapper,
                      table_hot: Optional[Tuple[int, ...]] = None,
-                     vocab_ranges: Optional[Sequence[Tuple[int, int]]] = None
-                     ) -> None:
+                     vocab_ranges: Optional[Sequence[Tuple[int, int]]] = None,
+                     layout: Optional[PaddedLayout] = None) -> None:
     """Checkpoint the state together with its row-layout provenance.
 
     A plain state snapshot is only restorable by a process that still holds
@@ -227,29 +349,44 @@ def save_with_layout(ckpt: FlashCheckpoint, state, step: int,
     with ``restore_with_layout`` and keeps training (and re-planning from
     the correct baseline) no matter how many re-plans preceded it.
 
+    Padded states are stored in the **canonical flat row order** (unpadded
+    before flattening) plus a ``padded_n_ps`` stamp: one blob schema
+    round-trips bit-exactly between flat and padded jobs, onto any future
+    shard count — padding is a restore-time placement choice, not a storage
+    format.
+
     Args:
       ckpt:      flash checkpoint to write to.
-      state:     live {params, opt, step} pytree (current layout).
+      state:     live {params, opt, step} pytree (current layout; padded on
+                 ``layout`` when one is given).
       step:      checkpoint step key.
       remapper:  the job's id remapper (its map matches ``state``'s layout).
       table_hot: the cache plan compiled into the current step (None = the
                  config default).
       vocab_ranges: the applied balanced PS ranges (None = uniform striping,
                  i.e. no placement plan applied yet).
+      layout:    the padded physical layout ``state`` lives on (None = flat).
+                 Stamped as ``padded_n_ps`` so a fresh ``--resume`` comes
+                 back padded on the same plan.
     """
     hot = (np.full(len(remapper.table_rows), -1, np.int64)
            if table_hot is None else np.asarray(table_hot, np.int64))
     ranges = (np.zeros((0,), np.int64) if vocab_ranges is None
               else np.asarray(vocab_ranges, np.int64).reshape(-1))
+    if layout is not None:
+        state = unpad_train_state(state, remapper.total_rows, layout)
     ckpt.save({"state": state, "layout": np.asarray(remapper.map, np.int64),
-               "table_hot": hot, "vocab_ranges": ranges}, step)
+               "table_hot": hot, "vocab_ranges": ranges,
+               "padded_n_ps": np.asarray(
+                   0 if layout is None else layout.n_ps, np.int64)}, step)
 
 
 def restore_with_layout(cfg: DLRMConfig, optimizer: Optimizer,
                         ckpt: FlashCheckpoint, *, step: Optional[int] = None
                         ) -> Tuple[Dict[str, Any], int, EmbeddingRemapper,
                                    Optional[Tuple[int, ...]],
-                                   Optional[Tuple[Tuple[int, int], ...]]]:
+                                   Optional[Tuple[Tuple[int, int], ...]],
+                                   Optional[PaddedLayout]]:
     """Restore a ``save_with_layout`` checkpoint in a fresh process.
 
     Args:
@@ -257,11 +394,16 @@ def restore_with_layout(cfg: DLRMConfig, optimizer: Optimizer,
       ckpt: flash checkpoint holding layout-stamped blobs.
       step: checkpoint step (None = latest).
 
-    Returns ``(state, restored_step, remapper, table_hot, vocab_ranges)``:
-    the remapper is reconstructed from the stamped map (route raw batches
-    through it), ``table_hot`` is the cache plan to recompile with (None =
-    config default), and ``vocab_ranges`` is the applied placement plan to
-    seed a fresh ``HotTableTracker``'s baseline with (None = uniform).
+    Returns ``(state, restored_step, remapper, table_hot, vocab_ranges,
+    layout)``: the remapper is reconstructed from the stamped map (route raw
+    batches through it), ``table_hot`` is the cache plan to recompile with
+    (None = config default), ``vocab_ranges`` is the applied placement plan
+    to seed a fresh ``HotTableTracker``'s baseline with (None = uniform),
+    and ``layout`` is the stamped padded physical layout — when not None the
+    returned state is already padded onto it (rebuilt from the stamped
+    ranges, or uniform striping when no plan was applied yet); compile the
+    step with ``layout=layout``. Blobs written before the padded-shard era
+    lack the stamp and restore as flat (``layout=None``).
     """
     n_tables = len(cfg.table_rows)
     like = {
@@ -272,8 +414,14 @@ def restore_with_layout(cfg: DLRMConfig, optimizer: Optimizer,
         "table_hot": jax.ShapeDtypeStruct((n_tables,), jnp.int64),
         # placeholder shape: restore takes leaf shapes from the stored blob
         "vocab_ranges": jax.ShapeDtypeStruct((0,), jnp.int64),
+        # absent in pre-padded-era blobs: zero-fills to 0 (= flat); every
+        # OTHER missing leaf still raises (truncated blobs must not restore)
+        "padded_n_ps": jax.ShapeDtypeStruct((), jnp.int64),
     }
-    blob, restored_step = ckpt.restore(like, step)
+    blob, restored_step = ckpt.restore(
+        like, step,
+        optional_leaves=(jax.tree_util.keystr(
+            (jax.tree_util.DictKey("padded_n_ps"),)),))
     remapper = EmbeddingRemapper(cfg.table_rows)
     remapper.map = np.asarray(blob["layout"], np.int64)
     hot = np.asarray(blob["table_hot"])
@@ -281,4 +429,12 @@ def restore_with_layout(cfg: DLRMConfig, optimizer: Optimizer,
     flat_ranges = np.asarray(blob["vocab_ranges"]).reshape(-1, 2)
     vocab_ranges = (None if flat_ranges.size == 0 else
                     tuple((int(s), int(e)) for s, e in flat_ranges))
-    return blob["state"], restored_step, remapper, table_hot, vocab_ranges
+    state = blob["state"]
+    n_ps = int(np.asarray(blob["padded_n_ps"]))
+    layout = None
+    if n_ps > 0:
+        layout = padded_layout_for_ranges(
+            vocab_ranges if vocab_ranges is not None
+            else uniform_vocab_ranges(cfg.total_embedding_rows, n_ps))
+        state = pad_train_state(state, cfg.total_embedding_rows, layout)
+    return state, restored_step, remapper, table_hot, vocab_ranges, layout

@@ -65,30 +65,38 @@ def make_eval_step(api: ModelAPI) -> Callable:
 
 # --- DLRM ---------------------------------------------------------------------
 def make_dlrm_train_state(cfg: DLRMConfig, optimizer: Optimizer,
-                          key) -> Dict[str, Any]:
-    """Fresh DLRM train state {params, opt, step} (shape source for restores)."""
+                          key, layout=None) -> Dict[str, Any]:
+    """Fresh DLRM train state {params, opt, step} (shape source for restores).
+
+    ``layout`` (a ``PaddedLayout``) builds the pooled stores — and their
+    optimizer-state mirrors — on the padded physical layout; row values are
+    bit-identical to the flat init from the same key.
+    """
     from repro.models.dlrm import init_dlrm
-    params = init_dlrm(cfg, key)
+    params = init_dlrm(cfg, key, layout=layout)
     return {"params": params, "opt": optimizer.init(params),
             "step": jnp.zeros((), jnp.int32)}
 
 
-def dlrm_train_state_specs(cfg: DLRMConfig, opt_name: str) -> Dict[str, Any]:
+def dlrm_train_state_specs(cfg: DLRMConfig, opt_name: str,
+                           layout=None) -> Dict[str, Any]:
     """Logical-axis spec tree mirroring ``make_dlrm_train_state``'s output."""
     from repro.models.dlrm import dlrm_param_specs
-    pspecs = dlrm_param_specs(cfg)
+    pspecs = dlrm_param_specs(cfg, layout=layout)
     return {"params": pspecs, "opt": optim_mod.state_specs(opt_name, pspecs),
             "step": ()}
 
 
 def make_dlrm_train_step(cfg: DLRMConfig, optimizer: Optimizer,
                          grad_compress: bool = False, *,
-                         table_hot=None) -> Callable:
+                         table_hot=None, layout=None) -> Callable:
     """DLRM train step; ``table_hot`` bakes a measured hot-row cache plan
-    into the compiled step (a live re-plan recompiles with the new plan)."""
+    into the compiled step and ``layout`` the padded physical placement
+    (a live re-plan recompiles with the new plans)."""
     def train_step(state, batch):
         loss, grads = jax.value_and_grad(
-            lambda p: dlrm_loss(p, batch, cfg, table_hot=table_hot))(state["params"])
+            lambda p: dlrm_loss(p, batch, cfg, table_hot=table_hot,
+                                layout=layout))(state["params"])
         if grad_compress:
             grads = optim_mod.compress_grads(grads)
         gnorm = optim_mod.global_norm(grads)

@@ -229,8 +229,9 @@ def test_layout_stamped_checkpoint_survives_process_restart():
                            table_hot=decision.table_hot))
 
     # "fresh process": nothing carried over except the checkpoint object
-    state2, step2, remapper2, table_hot2, ranges2 = replan.restore_with_layout(
-        CFG, opt, ckpt)
+    state2, step2, remapper2, table_hot2, ranges2, layout2 = \
+        replan.restore_with_layout(CFG, opt, ckpt)
+    assert layout2 is None                      # flat job: no padded stamp
     assert step2 == 7
     assert table_hot2 == decision.table_hot
     assert ranges2 == decision.vocab_ranges
