@@ -27,6 +27,7 @@ BENCHES = [
     ("fig13", "benchmarks.bench_fig13_straggler"),
     ("fig14", "benchmarks.bench_fig14_cluster"),
     ("fig15", "benchmarks.bench_fig15_jct_cdf"),
+    ("chaos", "benchmarks.bench_chaos"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -17,19 +17,27 @@ from repro.core.sharding_service import Shard, ShardingService
 
 
 class ShardDataLoader:
+    """``fault_hook(batch_index)`` — if given — runs before each batch is
+    built; it is the data-pipeline injection point of
+    ``repro.core.faults.FaultInjector.on_batch`` (straggler delays land on
+    the ingestion path, where real host-side stalls live)."""
+
     def __init__(self, service: ShardingService, worker_id: str,
                  batch_fn: Callable[[np.ndarray], Dict[str, np.ndarray]],
                  batch_size: int, *, clock: Callable[[], float] = time.monotonic,
-                 heartbeat_every: int = 1):
+                 heartbeat_every: int = 1,
+                 fault_hook: Optional[Callable[[int], None]] = None):
         self.service = service
         self.worker_id = worker_id
         self.batch_fn = batch_fn
         self.batch_size = batch_size
         self.clock = clock
         self.heartbeat_every = heartbeat_every
+        self.fault_hook = fault_hook
         self._shard: Optional[Shard] = None
         self._cursor = 0
         self._batches_since_hb = 0
+        self._batches_emitted = 0
 
     # ------------------------------------------------------------------
     def _ensure_shard(self) -> bool:
@@ -53,6 +61,9 @@ class ShardDataLoader:
         """
         if not self._ensure_shard():
             return None
+        if self.fault_hook is not None:
+            self.fault_hook(self._batches_emitted)
+        self._batches_emitted += 1
         shard = self._shard
         lo = shard.start + self._cursor
         hi = min(lo + self.batch_size, shard.end)

@@ -78,10 +78,30 @@ def main() -> None:
                          "(0 disables live re-planning)")
     ap.add_argument("--imbalance-threshold", type=float, default=1.2,
                     help="max/mean PS load that arms a re-plan")
+    # --- chaos / self-healing knobs (DLRM archs only) ----------------------
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="scripted fault plan, e.g. 'ps_loss@10,hang@20:0.5' "
+                         "(see repro.core.faults); implies --supervise")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed of the corruption-byte RNG (determinism)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run DLRM training under the recovery supervisor "
+                         "(watchdog + restore-with-backoff) even without "
+                         "injected faults")
+    ap.add_argument("--step-deadline", type=float, default=None,
+                    help="watchdog per-step deadline in seconds (hang "
+                         "detection; None disables)")
+    ap.add_argument("--max-restarts", type=int, default=5,
+                    help="capped restart budget of the supervisor")
+    ap.add_argument("--event-log", default=None, metavar="PATH",
+                    help="write the supervisor's structured event log (JSONL)")
     args = ap.parse_args()
 
     if args.arch in DLRMS:
-        train_dlrm(args)
+        if args.chaos or args.supervise:
+            train_dlrm_supervised(args)
+        else:
+            train_dlrm(args)
         return
     if args.batch is None:
         args.batch = 8
@@ -257,6 +277,65 @@ def train_dlrm(args) -> None:
                                 layout=layout)
         ckpt.wait()
         print(f"checkpointed at step {n} -> {args.ckpt_dir}")
+
+
+def train_dlrm_supervised(args) -> None:
+    """DLRM training under the self-healing supervisor (``--chaos`` /
+    ``--supervise``).
+
+    The scripted fault plan fires through the trainer/data/checkpoint hooks;
+    the supervisor detects each abnormality (watchdog deadline, typed fault,
+    EWMA outlier) and recovers from layout-stamped flash checkpoints —
+    the end-to-end §5 reliability loop on the real training path.
+    """
+    import tempfile
+
+    from repro.configs.dlrm_models import reduced_dlrm
+    from repro.core.faults import FaultInjector, parse_chaos_spec
+    from repro.train.supervisor import DLRMJob, Supervisor, SupervisorConfig
+
+    cfg = get_dlrm(args.arch)
+    if not args.full:
+        cfg = reduced_dlrm(cfg)
+    cfg = dataclasses.replace(cfg, zipf_alpha=args.zipf_alpha,
+                              hot_rows_k=args.hot_rows,
+                              batch_size=args.batch or cfg.batch_size)
+    opt_name = args.optimizer or "adagrad"
+    plan = parse_chaos_spec(args.chaos or "")
+    injector = FaultInjector(plan, seed=args.chaos_seed) if plan.specs else None
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="chaos_ckpt_")
+    ckpt = FlashCheckpoint(
+        ckpt_dir, async_persist=False,      # sync: every blob restorable
+        fault_hook=injector.on_persist if injector else None)
+    if injector is not None:
+        injector.bind_checkpoint(ckpt)
+    print(f"arch={cfg.name} kind={cfg.kind} params={cfg.param_count():,} "
+          f"supervised (chaos plan: {plan if plan.specs else 'none'}; "
+          f"ckpt -> {ckpt_dir})")
+
+    job = DLRMJob(cfg, ckpt, opt_name=opt_name, lr=args.lr,
+                  ckpt_every=args.ckpt_every, n_ps=args.n_ps,
+                  padded=args.padded_shards, injector=injector)
+    sup = Supervisor(job, SupervisorConfig(
+        step_deadline_s=args.step_deadline, max_restarts=args.max_restarts,
+        seed=args.chaos_seed))
+    try:
+        report = sup.run(args.steps, resume=args.resume)
+    finally:
+        if args.event_log:                  # log survives a failed run too
+            sup.write_event_log(args.event_log)
+    for ev in report.events:
+        print(f"  event step={ev.step:5d} {ev.kind} {ev.detail}")
+    lat = report.recovery_latencies_s
+    mean_lat = sum(lat) / len(lat) if lat else 0.0
+    print(f"CHAOS completed={report.completed} final_step={report.final_step} "
+          f"final_loss={report.final_loss:.6f} restarts={report.restarts} "
+          f"steps_lost={report.steps_lost} "
+          f"goodput={report.goodput_fraction:.3f} "
+          f"recovery_latency_mean_s={mean_lat:.4f}")
+    if args.event_log:
+        sup.write_event_log(args.event_log, report)
+        print(f"event log -> {args.event_log}")
 
 
 if __name__ == "__main__":

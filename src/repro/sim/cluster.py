@@ -114,24 +114,42 @@ class SimResult:
 
 
 class CloudSim:
+    """``failure_seed`` draws the failure/straggler/hot-PS RNG independently
+    of the scheduler's ``seed`` (default preserves the historical
+    ``seed + 1`` stream, so existing runs reproduce bit-for-bit);
+    ``timings`` sets the recovery-time model — pass measured latencies
+    (e.g. ``SupervisorReport.measured_timings()``) so the sim's failure
+    model agrees with the real system's recovery costs.
+    ``straggler_rebalance_s`` / ``unmitigated_s`` are the previously
+    hardcoded recovery horizons of dynamic-sharding rebalance and
+    no-intervention strategies."""
+
     def __init__(self, scheduler_name: str, *, total_cpu: float = 2048.0,
                  total_mem_gb: float = 16384.0, seed: int = 0, dt: float = 15.0,
                  pod_failure_rate_per_day: float = 0.015,
                  straggler_rate_per_pod_per_day: float = 0.05,
                  hotps_rate_per_pod_per_day: float = 0.04,
                  ckpt_interval_s: float = 1800.0,
-                 enable_failures: bool = True):
+                 enable_failures: bool = True,
+                 failure_seed: Optional[int] = None,
+                 timings: MigrationTimings = TIMINGS,
+                 straggler_rebalance_s: float = 60.0,
+                 unmitigated_s: float = 1800.0):
         from repro.core.autoscaler import ClusterCapacity
         self.capacity = ClusterCapacity(total_cpu, total_mem_gb)
         self.scheduler = make_scheduler(scheduler_name, self.capacity, seed)
         self.traits = self.scheduler.traits
-        self.rng = np.random.default_rng(seed + 1)
+        self.failure_seed = (seed + 1) if failure_seed is None else failure_seed
+        self.rng = np.random.default_rng(self.failure_seed)
         self.dt = dt
         self.pod_failure_rate = pod_failure_rate_per_day
         self.straggler_rate = straggler_rate_per_pod_per_day
         self.hotps_rate = hotps_rate_per_pod_per_day
         self.ckpt_interval_s = ckpt_interval_s
         self.enable_failures = enable_failures
+        self.timings = timings
+        self.straggler_rebalance_s = straggler_rebalance_s
+        self.unmitigated_s = unmitigated_s
 
     # ------------------------------------------------------------------
     def _true_t_iter(self, rj: _Running, r_eff: JobResources) -> float:
@@ -241,9 +259,9 @@ class CloudSim:
                     rj.pending_plan = None
                     rj.view.obs_since_plan = 0
                     # flash sync downtime (seamless) already tiny
-                    dtime = (TIMINGS.flash_ckpt_save_s + TIMINGS.flash_ckpt_load_s
+                    dtime = (self.timings.flash_ckpt_save_s + self.timings.flash_ckpt_load_s
                              if self.traits.flash_ckpt else
-                             TIMINGS.rds_ckpt_save_s + TIMINGS.rds_ckpt_load_s)
+                             self.timings.rds_ckpt_save_s + self.timings.rds_ckpt_load_s)
                     rj.blocked_until = now + dtime
                     rj.record.downtime_s += dtime
                     continue
@@ -290,7 +308,7 @@ class CloudSim:
                     rj.resources = dataclasses.replace(rj.resources, mem_p=new_mem_p)
                     rj.view.resources = rj.resources
                     rj.samples_done = rj.last_ckpt_samples
-                    dtime = TIMINGS.provision_s + TIMINGS.rds_ckpt_load_s
+                    dtime = self.timings.provision_s + self.timings.rds_ckpt_load_s
                     rj.blocked_until = now + dtime
                     rj.record.downtime_s += dtime
                     continue
@@ -303,10 +321,10 @@ class CloudSim:
                         rj.record.failures += 1
                         if self.traits.dynamic_sharding:
                             # shard requeued; worker replaced in background
-                            rj.capacity_loss_until = now + TIMINGS.provision_s
+                            rj.capacity_loss_until = now + self.timings.provision_s
                         else:
                             rj.samples_done = rj.last_ckpt_samples
-                            dtime = TIMINGS.provision_s + TIMINGS.rds_ckpt_load_s
+                            dtime = self.timings.provision_s + self.timings.rds_ckpt_load_s
                             rj.blocked_until = now + dtime
                             rj.record.downtime_s += dtime
                             continue
@@ -314,33 +332,33 @@ class CloudSim:
                     if now >= rj.straggler_until and self.rng.random() < p_str:
                         rj.record.stragglers += 1
                         if self.traits.dynamic_sharding:
-                            rj.straggler_until = now + 60.0   # rebalanced <1 min
+                            rj.straggler_until = now + self.straggler_rebalance_s  # rebalanced
                         elif self.traits.elastic:
                             # stop-and-restart replacement at next decision
                             rj.straggler_until = now + self.traits.interval_s
-                            dtime = (TIMINGS.rds_ckpt_save_s + TIMINGS.provision_s
-                                     + TIMINGS.rds_ckpt_load_s)
+                            dtime = (self.timings.rds_ckpt_save_s + self.timings.provision_s
+                                     + self.timings.rds_ckpt_load_s)
                             rj.blocked_until = now + self.traits.interval_s + dtime
                             rj.record.downtime_s += dtime
                         else:
-                            rj.straggler_until = now + 1800.0  # no intervention
+                            rj.straggler_until = now + self.unmitigated_s  # no intervention
                     p_hot = rj.resources.p * self.hotps_rate * self.dt / 86400.0
                     if now >= rj.hotps_until and self.rng.random() < p_hot:
                         rj.record.hot_pses += 1
                         if self.traits.seamless_migration:
                             # provisioning overlaps training; flash sync at end
-                            rj.hotps_until = now + TIMINGS.provision_s
-                            sync = (TIMINGS.flash_ckpt_save_s
-                                    + TIMINGS.flash_ckpt_load_s)
+                            rj.hotps_until = now + self.timings.provision_s
+                            sync = (self.timings.flash_ckpt_save_s
+                                    + self.timings.flash_ckpt_load_s)
                             rj.record.downtime_s += sync
                         elif self.traits.elastic:
                             rj.hotps_until = now + self.traits.interval_s
-                            dtime = (TIMINGS.rds_ckpt_save_s + TIMINGS.provision_s
-                                     + TIMINGS.rds_ckpt_load_s)
+                            dtime = (self.timings.rds_ckpt_save_s + self.timings.provision_s
+                                     + self.timings.rds_ckpt_load_s)
                             rj.blocked_until = now + self.traits.interval_s + dtime
                             rj.record.downtime_s += dtime
                         else:
-                            rj.hotps_until = now + 1800.0
+                            rj.hotps_until = now + self.unmitigated_s
 
                 # --- completion ----------------------------------------------
                 if rj.samples_done >= rj.job.total_samples:
@@ -370,10 +388,10 @@ class CloudSim:
                         continue
                     if self.traits.seamless_migration:
                         rj.pending_plan = plan
-                        rj.plan_apply_at = now + TIMINGS.provision_s
+                        rj.plan_apply_at = now + self.timings.provision_s
                     else:
-                        dtime = (TIMINGS.rds_ckpt_save_s + TIMINGS.provision_s
-                                 + TIMINGS.rds_ckpt_load_s)
+                        dtime = (self.timings.rds_ckpt_save_s + self.timings.provision_s
+                                 + self.timings.rds_ckpt_load_s)
                         used_cpu_alloc += dcpu
                         used_mem_alloc += dmem
                         rj.resources = plan

@@ -119,3 +119,54 @@ def resume_dlrm_on_mesh(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
         state = jax.device_put(
             state, dlrm_state_shardings(cfg, opt_name, policy, layout=layout))
     return state, restored_step, policy
+
+
+def resume_dlrm_stamped(cfg: DLRMConfig, optimizer: Optimizer,
+                        ckpt: FlashCheckpoint, *,
+                        onto_n_ps: Optional[int] = None, mesh=None,
+                        opt_name: str = "adagrad", step: Optional[int] = None):
+    """Elastic re-resume of a *layout-stamped* blob, e.g. after a PS loss.
+
+    The stamped-blob analog of ``resume_dlrm_on_mesh(from_layout=, layout=)``:
+    the blob's own ``padded_n_ps`` stamp plays the ``from_layout`` role, and
+    ``onto_n_ps`` — the *surviving* shard count after a PS-shard loss — the
+    ``layout`` role. Checkpoints store the canonical flat row order, so a
+    job padded on N shards re-resumes bit-exactly onto any smaller (or
+    larger) shard count; the supervisor's ``PSShardLoss`` recovery is this
+    call with ``onto_n_ps = n_ps - n_lost``.
+
+    The shrunk placement is the uniform plan over the survivors — the live
+    re-planning loop re-balances it from real counts at its next trigger.
+
+    Args:
+      cfg, optimizer: the job being resumed.
+      ckpt:      flash checkpoint holding ``save_with_layout`` blobs.
+      onto_n_ps: surviving PS shard count (None = keep the stamped layout;
+                 ignored for flat jobs, which have no physical shards).
+      mesh:      optional target mesh for re-placement.
+      opt_name:  optimizer name for sharding specs when a mesh is given.
+      step:      checkpoint step (None = newest valid).
+
+    Returns ``(state, restored_step, remapper, table_hot, vocab_ranges,
+    layout)`` exactly like ``replan.restore_with_layout``, with ``state``
+    padded onto (and ``layout``/``vocab_ranges`` describing) the surviving
+    shard count.
+    """
+    from repro.sharding.policy import (padded_layout_for_ranges,
+                                       uniform_vocab_ranges)
+    from repro.train import replan as replan_mod
+    R = cfg.total_embedding_rows
+    state, restored_step, remapper, table_hot, vocab_ranges, layout = \
+        replan_mod.restore_with_layout(cfg, optimizer, ckpt, step=step)
+    if onto_n_ps is not None and layout is not None and \
+            onto_n_ps != layout.n_ps:
+        state = replan_mod.unpad_train_state(state, R, layout)
+        ranges = uniform_vocab_ranges(R, onto_n_ps)
+        layout = padded_layout_for_ranges(ranges)
+        state = replan_mod.pad_train_state(state, R, layout)
+        vocab_ranges = tuple((int(s), int(e)) for s, e in ranges)
+    if mesh is not None:
+        policy = make_dlrm_policy(mesh, vocab_ranges=vocab_ranges)
+        state = jax.device_put(
+            state, dlrm_state_shardings(cfg, opt_name, policy, layout=layout))
+    return state, restored_step, remapper, table_hot, vocab_ranges, layout

@@ -95,12 +95,25 @@ class EmbeddingRemapper:
         Permutations never cross table boundaries, so the result is again a
         valid per-table-local id tensor (same dtype as the input).
 
+        Out-of-range raw ids raise ``ValueError`` naming the offending
+        table and its bound — an id past its table's rows would otherwise
+        silently index a *neighboring table's* rows after the offset shift
+        (or garbage past the pool), corrupting gradients with no error.
+
         Args:
           sparse: (B, T, H) raw per-table-local int ids from the stream.
 
         Returns the remapped (B, T, H) local ids under the current layout.
         """
         sparse = np.asarray(sparse)
+        rows = np.asarray(self.table_rows, np.int64)
+        bad = (sparse < 0) | (sparse.astype(np.int64) >= rows[None, :, None])
+        if bad.any():
+            b, t, h = (int(i[0]) for i in np.nonzero(bad))
+            raise ValueError(
+                f"sparse id {int(sparse[b, t, h])} out of range for table "
+                f"{t} (rows={int(rows[t])}): raw ids must lie in "
+                f"[0, {int(rows[t])}) — refusing to index garbage rows")
         g = sparse.astype(np.int64) + self.offsets[None, :, None]
         return (self.map[g] - self.offsets[None, :, None]).astype(sparse.dtype)
 

@@ -63,6 +63,29 @@ def make_eval_step(api: ModelAPI) -> Callable:
     return eval_step
 
 
+def with_step_hooks(step_fn: Callable, *,
+                    before: Callable = None, after: Callable = None) -> Callable:
+    """Wrap a compiled train step with host-side hooks.
+
+    ``before(state, batch)`` runs on the host immediately before dispatching
+    the step — this is the trainer-layer seam the fault injector
+    (``repro.core.faults.FaultInjector.before_step``) fires through, so
+    scripted crashes/stalls happen exactly where the step executes;
+    ``after(new_state, metrics)`` runs once the step returns. Apply to the
+    *jitted* callable: the hooks stay outside the traced computation and
+    run on every invocation (not once at trace time).
+    """
+    def wrapped(state, batch):
+        if before is not None:
+            before(state, batch)
+        new_state, metrics = step_fn(state, batch)
+        if after is not None:
+            after(new_state, metrics)
+        return new_state, metrics
+
+    return wrapped
+
+
 # --- DLRM ---------------------------------------------------------------------
 def make_dlrm_train_state(cfg: DLRMConfig, optimizer: Optimizer,
                           key, layout=None) -> Dict[str, Any]:

@@ -1,0 +1,146 @@
+"""Deterministic fault injection: spec grammar, firing semantics, hooks."""
+import os
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core.faults import (
+    AttemptAbandoned, FaultInjector, FaultPlan, FaultSpec, PSShardLoss,
+    TransientOOM, corrupt_blob, parse_chaos_spec, random_plan,
+)
+
+
+# ---------------------------------------------------------------- spec grammar
+def test_parse_round_trip():
+    spec = "ps_loss@10,hang@20:0.5,straggler@30x5:0.07"
+    plan = parse_chaos_spec(spec)
+    assert str(plan) == spec
+    assert parse_chaos_spec(str(plan)) == plan
+
+
+def test_parse_defaults_and_windows():
+    plan = parse_chaos_spec("straggler@30x5")
+    (s,) = plan.specs
+    assert s.param == 0.05                      # kind default filled in
+    assert plan.at_step(29) == []
+    assert plan.at_step(30) == [s]
+    assert plan.at_step(34) == [s]
+    assert plan.at_step(35) == []
+
+
+def test_parse_empty_and_errors():
+    assert parse_chaos_spec("") == FaultPlan()
+    assert parse_chaos_spec("  ") == FaultPlan()
+    with pytest.raises(ValueError, match="kind@step"):
+        parse_chaos_spec("ps_loss")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_chaos_spec("explode@5")
+    with pytest.raises(ValueError, match="bad fault window"):
+        FaultSpec("hang", step=-1)
+    with pytest.raises(ValueError, match="bad fault window"):
+        FaultSpec("hang", step=0, count=0)
+
+
+def test_random_plan_deterministic():
+    a, b = random_plan(4, 100, seed=7), random_plan(4, 100, seed=7)
+    assert a == b
+    assert random_plan(4, 100, seed=8) != a
+    assert all(1 <= s.step < 100 for s in a.specs)
+
+
+# ------------------------------------------------------------ firing semantics
+def test_crash_faults_fire_once():
+    inj = FaultInjector(parse_chaos_spec("ps_loss@3:2,oom@5"))
+    inj.before_step(2)                          # nothing scheduled
+    with pytest.raises(PSShardLoss) as e:
+        inj.before_step(3)
+    assert e.value.n_lost == 2
+    inj.before_step(3)                          # spent: replay doesn't re-fire
+    with pytest.raises(TransientOOM):
+        inj.before_step(5)
+    inj.before_step(5)
+    assert [k for _, k in inj.fired] == ["ps_loss", "oom"]
+
+
+def test_hang_is_cancellable():
+    inj = FaultInjector(parse_chaos_spec("hang@1:30"))
+    cancel = threading.Event()
+    t = threading.Timer(0.05, cancel.set)
+    t.start()
+    t0 = time.monotonic()
+    with pytest.raises(AttemptAbandoned):
+        inj.before_step(1, cancel)
+    assert time.monotonic() - t0 < 5.0          # unwound, not a 30 s stall
+
+
+def test_short_hang_completes():
+    inj = FaultInjector(parse_chaos_spec("hang@1:0.05"))
+    t0 = time.monotonic()
+    inj.before_step(1)                          # no cancel: sleeps it out
+    assert time.monotonic() - t0 >= 0.04
+
+
+def test_straggler_delays_batch():
+    inj = FaultInjector(parse_chaos_spec("straggler@2x2:0.05"))
+    t0 = time.monotonic()
+    inj.on_batch(1)
+    assert time.monotonic() - t0 < 0.04
+    t0 = time.monotonic()
+    inj.on_batch(2)
+    assert time.monotonic() - t0 >= 0.04
+    t0 = time.monotonic()
+    inj.on_batch(2)                             # spent for this step
+    assert time.monotonic() - t0 < 0.04
+    t0 = time.monotonic()
+    inj.on_batch(3)                             # window covers step 3 too
+    assert time.monotonic() - t0 >= 0.04
+
+
+def test_injection_log_records_what_fired():
+    inj = FaultInjector(parse_chaos_spec("oom@1"))
+    with pytest.raises(TransientOOM):
+        inj.before_step(1)
+    (entry,) = inj.log
+    assert entry["kind"] == "fault_injected"
+    assert entry["fault"] == "oom" and entry["step"] == 1
+
+
+# --------------------------------------------------------------- blob sabotage
+def test_corrupt_blob_flip_deterministic():
+    def make(d, name="blob.bin"):
+        p = os.path.join(d, name)
+        with open(p, "wb") as f:
+            f.write(bytes(range(256)) * 16)
+        return p
+
+    with tempfile.TemporaryDirectory() as d:
+        a, b = make(d, "a"), make(d, "b")
+        corrupt_blob(a, seed=3)
+        corrupt_blob(b, seed=3)
+        assert open(a, "rb").read() == open(b, "rb").read()
+        assert open(a, "rb").read() != bytes(range(256)) * 16
+
+
+def test_corrupt_blob_truncate():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "blob.bin")
+        with open(p, "wb") as f:
+            f.write(b"x" * 1000)
+        msg = corrupt_blob(p, mode="truncate")
+        assert os.path.getsize(p) == 500 and "truncated" in msg
+
+
+# ----------------------------------------------------------- data-pipeline hook
+def test_shard_loader_fault_hook_sees_batch_indices():
+    from repro.core.sharding_service import ShardingService
+    from repro.data.pipeline import ShardDataLoader
+
+    seen = []
+    svc = ShardingService(64, shard_size=32)
+    loader = ShardDataLoader(svc, "w0", lambda idx: {"idx": idx},
+                             batch_size=16, fault_hook=seen.append)
+    batches = list(loader)
+    assert len(batches) == 4
+    assert seen == [0, 1, 2, 3]                 # hook fired before every batch

@@ -1,0 +1,179 @@
+"""Hardened flash checkpoint: atomicity, checksums, newest-valid fallback."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.faults import corrupt_blob
+from repro.core.flash_checkpoint import (
+    CheckpointCorruptError, FlashCheckpoint,
+)
+
+
+def _state(x: float):
+    return {"w": np.full(16, x, np.float32), "b": np.arange(4.0)}
+
+
+def _dirname(step: int) -> str:
+    return f"ckpt_{step:012d}"
+
+
+@pytest.fixture()
+def store():
+    with tempfile.TemporaryDirectory() as d:
+        yield FlashCheckpoint(d, keep=3, async_persist=False), d
+
+
+# -------------------------------------------------------------------- basics
+def test_save_restore_round_trip(store):
+    ck, d = store
+    ck.save(_state(1.5), 10)
+    assert os.path.isdir(os.path.join(d, _dirname(10)))
+    manifest = json.load(open(os.path.join(d, _dirname(10), "MANIFEST.json")))
+    assert manifest["step"] == 10 and len(manifest["leaves"]) == 2
+    restored, step = ck.restore(_state(0.0))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["w"]), _state(1.5)["w"])
+
+
+def test_no_staging_dirs_left_behind(store):
+    ck, d = store
+    for s in (5, 10, 15):
+        ck.save(_state(s), s)
+    assert not [n for n in os.listdir(d) if ".tmp-" in n]
+
+
+def test_eviction_keeps_newest(store):
+    ck, d = store
+    for s in (5, 10, 15, 20, 25):
+        ck.save(_state(s), s)
+    assert ck.valid_steps() == [15, 20, 25]     # keep=3
+
+
+# ------------------------------------------------------- corruption handling
+def test_corrupt_latest_falls_back_to_newest_valid(store):
+    ck, d = store
+    for s in (5, 10, 15):
+        ck.save(_state(s), s)
+    ck.drop_memory_tier()
+    corrupt_blob(os.path.join(d, _dirname(15)))
+    restored, step = ck.restore(_state(0.0))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["w"]), _state(10)["w"])
+    assert any(e["kind"] == "corrupt_blob_fallback" and e["step"] == 15
+               for e in ck.events)
+    assert ck.valid_steps() == [5, 10]
+
+
+def test_truncated_blob_detected(store):
+    ck, d = store
+    ck.save(_state(1.0), 5)
+    ck.save(_state(2.0), 10)
+    ck.drop_memory_tier()
+    corrupt_blob(os.path.join(d, _dirname(10)), mode="truncate")
+    _, step = ck.restore(_state(0.0))
+    assert step == 5
+
+
+def test_explicit_corrupt_step_raises(store):
+    ck, d = store
+    ck.save(_state(1.0), 5)
+    ck.save(_state(2.0), 10)
+    ck.drop_memory_tier()
+    corrupt_blob(os.path.join(d, _dirname(10)))
+    with pytest.raises(CheckpointCorruptError):
+        ck.restore(_state(0.0), step=10)        # asked for that exact blob
+
+
+def test_all_blobs_corrupt_raises_filenotfound(store):
+    ck, d = store
+    ck.save(_state(1.0), 5)
+    ck.drop_memory_tier()
+    corrupt_blob(os.path.join(d, _dirname(5)))
+    with pytest.raises(FileNotFoundError, match="no valid checkpoint"):
+        ck.restore(_state(0.0))
+
+
+def test_memory_tier_shadows_corrupt_disk(store):
+    ck, d = store
+    ck.save(_state(3.0), 5)
+    corrupt_blob(os.path.join(d, _dirname(5)))  # disk damaged, memory intact
+    restored, step = ck.restore(_state(0.0))
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), _state(3.0)["w"])
+
+
+def test_manifest_leaf_set_mismatch_detected(store):
+    ck, d = store
+    ck.save(_state(1.0), 5)
+    ck.drop_memory_tier()
+    mpath = os.path.join(d, _dirname(5), "MANIFEST.json")
+    manifest = json.load(open(mpath))
+    manifest["leaves"]["['extra']"] = {"crc32": 0, "shape": [1],
+                                       "dtype": "float32"}
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(_state(0.0))                 # sole blob fails verification
+
+
+# ----------------------------------------------- malformed neighbors skipped
+def test_malformed_entries_skipped_and_logged(store):
+    ck, d = store
+    ck.save(_state(1.0), 5)
+    os.makedirs(os.path.join(d, "ckpt_garbage"))
+    os.makedirs(os.path.join(d, "ckpt_000000000099.tmp-123"))  # dead staging
+    os.makedirs(os.path.join(d, _dirname(50)))  # step dir without manifest
+    ck.drop_memory_tier()
+    _, step = ck.restore(_state(0.0))           # neighbors don't break restore
+    assert step == 5
+    kinds = {e["kind"] for e in ck.events}
+    assert {"skip_malformed", "skip_staging_dir",
+            "skip_missing_manifest"} <= kinds
+    ck.save(_state(2.0), 10)                    # eviction survives them too
+    assert 10 in ck.valid_steps()
+
+
+def test_eviction_does_not_remove_staging_or_malformed(store):
+    ck, d = store
+    os.makedirs(os.path.join(d, "ckpt_notastep"))
+    for s in (5, 10, 15, 20):
+        ck.save(_state(s), s)
+    assert os.path.isdir(os.path.join(d, "ckpt_notastep"))
+
+
+# ------------------------------------------------------------- legacy format
+def test_legacy_npz_blob_still_restores(store):
+    ck, d = store
+    flat = {"['w']": _state(7.0)["w"], "['b']": _state(7.0)["b"]}
+    np.savez(os.path.join(d, "ckpt_000000000007.npz"), **flat)
+    restored, step = ck.restore(_state(0.0))
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]), _state(7.0)["w"])
+
+
+def test_missing_leaf_raises_not_zero_fills(store):
+    ck, d = store
+    ck.save({"w": np.ones(4)}, 5)
+    with pytest.raises(KeyError, match="missing leaf"):
+        ck.restore({"w": np.zeros(4), "extra": np.zeros(2)})
+
+
+def test_optional_leaves_zero_fill(store):
+    ck, d = store
+    ck.save({"w": np.ones(4)}, 5)
+    like = {"w": np.zeros(4), "extra": np.ones(2, np.float32)}
+    restored, _ = ck.restore(like, optional_leaves=("['extra']",))
+    np.testing.assert_array_equal(np.asarray(restored["extra"]),
+                                  np.zeros(2, np.float32))
+
+
+def test_async_persist_waits(tmp_path):
+    ck = FlashCheckpoint(str(tmp_path), keep=2, async_persist=True)
+    for s in (5, 10):
+        ck.save(_state(s), s)
+    ck.wait()
+    ck.drop_memory_tier()
+    _, step = ck.restore(_state(0.0))
+    assert step == 10

@@ -272,3 +272,21 @@ def test_permute_train_state_touches_only_pooled_rows():
     np.testing.assert_array_equal(np.asarray(out["params"]["mlp"]["w0"]),
                                   np.asarray(state["params"]["mlp"]["w0"]))
     assert int(out["step"]) == int(state["step"])
+
+
+def test_remapper_rejects_out_of_range_ids():
+    """Out-of-range raw ids raise (naming table and bound) instead of
+    silently wrapping into a neighboring table's rows."""
+    import pytest
+
+    rm = replan.EmbeddingRemapper((8, 4))
+    ok = np.zeros((2, 2, 3), np.int64)
+    np.testing.assert_array_equal(rm.remap(ok), ok)   # identity before plans
+    bad = ok.copy()
+    bad[1, 1, 2] = 4                                  # table 1 has rows=[0,4)
+    with pytest.raises(ValueError, match=r"table 1 \(rows=4\)"):
+        rm.remap(bad)
+    neg = ok.copy()
+    neg[0, 0, 0] = -1
+    with pytest.raises(ValueError, match="out of range"):
+        rm.remap(neg)

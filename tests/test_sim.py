@@ -60,3 +60,57 @@ def test_utilization_timeseries_populated(jobs):
     assert len(res.ts_time) > 10
     assert all(u <= a + 1e-6 for u, a in zip(res.ts_used_cpu, res.ts_alloc_cpu)
                if a > 0)
+
+
+def test_failure_rng_seeding_deterministic():
+    """Same (seed, failure_seed) → identical records; the failure stream is
+    decoupled from the scheduler seed and fully reproducible."""
+    def records(seed, failure_seed):
+        jobs = generate_jobs(6, seed=4, mean_msamples=20.0)
+        sim = CloudSim("dlrover_rm", total_cpu=8192, total_mem_gb=65536,
+                       seed=seed, failure_seed=failure_seed,
+                       pod_failure_rate_per_day=5.0)
+        res = sim.run(jobs, horizon_s=12 * 3600)
+        return [(r.completed, r.failures, r.stragglers, r.hot_pses,
+                 round(r.downtime_s, 6)) for r in res.records]
+
+    assert records(2, 77) == records(2, 77)
+    assert records(2, 77) != records(2, 78)     # failure stream is its own knob
+
+
+def test_failure_seed_default_preserves_legacy_stream():
+    """failure_seed=None must reproduce the historical ``seed + 1`` stream."""
+    sim_default = CloudSim("dlrover_rm", seed=9)
+    sim_explicit = CloudSim("dlrover_rm", seed=9, failure_seed=10)
+    assert sim_default.failure_seed == 10
+    assert (sim_default.rng.integers(0, 1 << 30, 8).tolist()
+            == sim_explicit.rng.integers(0, 1 << 30, 8).tolist())
+
+
+def test_recovery_time_parameters_are_config():
+    from repro.core.migration import MigrationTimings
+    slow = MigrationTimings(flash_ckpt_load_s=123.0)
+    sim = CloudSim("dlrover_rm", seed=1, timings=slow,
+                   straggler_rebalance_s=30.0, unmitigated_s=900.0)
+    assert sim.timings.flash_ckpt_load_s == 123.0
+    assert sim.straggler_rebalance_s == 30.0
+    assert sim.unmitigated_s == 900.0
+
+
+def test_measured_timings_change_downtime():
+    """The sim actually consumes injected timings: a catastrophically slow
+    recovery model must show up as more downtime under heavy failures."""
+    from repro.core.migration import MigrationTimings
+
+    def downtime(timings):
+        jobs = generate_jobs(6, seed=4, mean_msamples=20.0)
+        sim = CloudSim("static_tuned", total_cpu=8192, total_mem_gb=65536,
+                       seed=2, failure_seed=5, timings=timings,
+                       pod_failure_rate_per_day=5.0)
+        res = sim.run(jobs, horizon_s=12 * 3600)
+        return sum(r.downtime_s for r in res.records)
+
+    fast = downtime(MigrationTimings())
+    slow = downtime(MigrationTimings(provision_s=1800.0,
+                                     rds_ckpt_load_s=1800.0))
+    assert slow > fast

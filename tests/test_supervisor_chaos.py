@@ -1,0 +1,185 @@
+"""Chaos suite: the self-healing supervisor over the real DLRM train loop.
+
+The load-bearing property everywhere: recovery is BIT-EXACT. Batches are a
+pure function of the global step, so after any detect → restore → replay
+cycle the loss trajectory must EQUAL the no-fault run's — these tests
+assert ``==`` on float losses, never closeness.
+"""
+import functools
+import json
+import tempfile
+
+import pytest
+
+from repro.configs.dlrm_models import WIDE_DEEP, reduced_dlrm
+from repro.core.faults import FaultInjector, parse_chaos_spec
+from repro.core.flash_checkpoint import FlashCheckpoint
+from repro.train.supervisor import (
+    DLRMJob, RestartBudgetExceeded, Supervisor, SupervisorConfig,
+)
+from tests._hypothesis_compat import given, settings, st
+
+CFG = reduced_dlrm(WIDE_DEEP)
+T = 16                                          # steps per supervised run
+
+
+def _supervised(chaos: str, *, padded: bool = True, deadline: float = None,
+                max_restarts: int = 5, hot_rows_k: int = 0,
+                total_steps: int = T):
+    import dataclasses
+    cfg = dataclasses.replace(CFG, hot_rows_k=hot_rows_k)
+    inj = FaultInjector(parse_chaos_spec(chaos), seed=0)
+    ckpt = FlashCheckpoint(tempfile.mkdtemp(), keep=3, async_persist=False,
+                           fault_hook=inj.on_persist)
+    inj.bind_checkpoint(ckpt)
+    job = DLRMJob(cfg, ckpt, ckpt_every=4, n_ps=4, padded=padded,
+                  injector=inj)
+    sup = Supervisor(job, SupervisorConfig(
+        step_deadline_s=deadline, max_restarts=max_restarts,
+        backoff_base_s=0.01, backoff_cap_s=0.05))
+    report = sup.run(total_steps)
+    return job, sup, report
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline_losses():
+    """Loss trajectory of the clean run (flat == padded, verified below)."""
+    job, _, _ = _supervised("")
+    return dict(job.losses)
+
+
+def _assert_bit_exact(job):
+    base = _baseline_losses()
+    for step, loss in sorted(job.losses.items()):
+        assert loss == base[step], (
+            f"step {step}: recovered {loss!r} != clean {base[step]!r}")
+
+
+# ----------------------------------------------------------- fault scenarios
+def test_clean_flat_equals_clean_padded():
+    job, _, rep = _supervised("", padded=False)
+    assert rep.restarts == 0 and rep.goodput_fraction == 1.0
+    _assert_bit_exact(job)                      # baseline ran padded
+
+
+def test_ps_loss_elastic_shrink_bit_exact():
+    job, _, rep = _supervised("ps_loss@6")
+    assert rep.completed and rep.final_step == T
+    assert job.n_ps == 3 and job.layout.n_ps == 3   # shrunk onto survivors
+    assert any(e.kind == "fault_detected" and e.detail["fault"] == "ps_loss"
+               for e in rep.events)
+    assert any(e.kind == "recovered" and
+               e.detail["action"] == "elastic_shrink" and
+               e.detail["surviving_n_ps"] == 3 for e in rep.events)
+    _assert_bit_exact(job)
+
+
+def test_double_ps_loss_shrinks_twice():
+    job, _, rep = _supervised("ps_loss@5,ps_loss@10")
+    assert job.n_ps == 2 and rep.restarts == 2
+    _assert_bit_exact(job)
+
+
+def test_hang_watchdog_detection_bit_exact():
+    job, _, rep = _supervised("hang@9", deadline=1.0)   # default stall: 30 s
+    assert rep.completed and rep.final_step == T
+    det = [e for e in rep.events if e.kind == "fault_detected"]
+    assert det and det[0].detail["fault"] == "hang"
+    rec = [e for e in rep.events if e.kind == "recovered"]
+    assert rec and rec[0].detail["cause"] == "hang"
+    assert rec[0].detail["recovery_latency_s"] > 0
+    _assert_bit_exact(job)
+
+
+def test_corrupt_latest_ckpt_falls_back_and_recovers():
+    # corrupt the step-8 blob (dropping the memory tier), then crash at 10:
+    # recovery must fall back past the damaged blob to step 4 and replay
+    job, sup, rep = _supervised("ckpt_corrupt@8,ps_loss@10")
+    assert rep.completed
+    assert any(e["kind"] == "corrupt_blob_fallback"
+               for e in job.ckpt.events)
+    rec = [e for e in rep.events if e.kind == "recovered"]
+    assert rec[0].step == 4 and rec[0].detail["steps_lost"] == 6
+    _assert_bit_exact(job)
+
+
+def test_truncated_ckpt_falls_back_and_recovers():
+    job, _, rep = _supervised("ckpt_truncate@8,ps_loss@10")
+    assert rep.completed
+    assert any(e["kind"] == "corrupt_blob_fallback" for e in job.ckpt.events)
+    _assert_bit_exact(job)
+
+
+def test_straggler_delay_detected_not_restarted():
+    _, _, rep = _supervised("straggler@10:0.5")
+    assert rep.restarts == 0                    # slow ≠ dead: no restore
+    stragglers = [e for e in rep.events if e.kind == "straggler_detected"]
+    assert stragglers and stragglers[0].step == 10
+
+
+def test_oom_walks_degradation_ladder():
+    job, _, rep = _supervised("oom@5,oom@9", hot_rows_k=24)
+    actions = [e.detail.get("action") for e in rep.events
+               if e.kind == "recovered"]
+    assert actions == ["drop_hot_cache", f"shrink_batch_to_{CFG.batch_size // 2}"]
+    assert rep.completed and rep.steps_lost == 0    # state intact: no replay
+    assert job.cfg.hot_rows_k == 0
+    assert job.cfg.batch_size == CFG.batch_size // 2
+
+
+def test_restart_budget_exceeded_raises():
+    with pytest.raises(RestartBudgetExceeded):
+        _supervised("ps_loss@2,ps_loss@4,ps_loss@6", max_restarts=2)
+
+
+# ------------------------------------------------------------- event logging
+def test_event_log_is_structured_jsonl(tmp_path):
+    _, sup, rep = _supervised("ps_loss@6")
+    path = tmp_path / "events.jsonl"
+    sup.write_event_log(str(path), rep)
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert lines[-1]["kind"] == "summary"
+    assert lines[-1]["completed"] is True
+    assert lines[-1]["restarts"] == 1
+    assert 0 < lines[-1]["goodput_fraction"] <= 1
+    assert lines[-1]["recovery_latency_mean_s"] > 0
+    body = lines[:-1]
+    assert {e["kind"] for e in body} >= {"fault_detected", "recovered"}
+    assert all({"t", "kind", "step", "detail"} <= set(e) for e in body)
+
+
+def test_report_feeds_sim_timings():
+    from repro.sim.cluster import CloudSim
+    _, _, rep = _supervised("ps_loss@6")
+    timings = rep.measured_timings()
+    assert timings.flash_ckpt_load_s > 0
+    sim = CloudSim("dlrover_rm", timings=timings, failure_seed=7)
+    assert sim.timings is timings and sim.failure_seed == 7
+
+
+# ---------------------------------------------- kill/resume property (sat. c)
+@settings(max_examples=4, deadline=None)
+@given(kill_at=st.integers(2, 11), padded=st.booleans(),
+       n_ps2=st.integers(1, 4))
+def test_kill_anywhere_resume_anywhere_bit_exact(kill_at, padded, n_ps2):
+    """Kill at an arbitrary step; a FRESH process over the same persist dir
+    resumes (flat or padded, onto any surviving PS count) and reproduces the
+    uninterrupted loss trajectory exactly."""
+    base = _baseline_losses()
+    with tempfile.TemporaryDirectory() as d:
+        ck1 = FlashCheckpoint(d, keep=3, async_persist=False)
+        job1 = DLRMJob(CFG, ck1, ckpt_every=3, n_ps=3, padded=padded)
+        job1.start(resume=False)
+        for _ in range(kill_at):
+            job1.run_step()
+        del job1, ck1                           # the process dies here
+        ck2 = FlashCheckpoint(d, keep=3, async_persist=False)
+        job2 = DLRMJob(CFG, ck2, ckpt_every=3, n_ps=3, padded=padded)
+        step0 = job2.restore(onto_n_ps=n_ps2 if padded else None)
+        assert step0 == (kill_at // 3) * 3      # newest blob on the cadence
+        if padded:
+            assert job2.layout.n_ps == n_ps2
+        while job2.global_step < T:
+            job2.run_step()
+        for step, loss in sorted(job2.losses.items()):
+            assert loss == base[step]
