@@ -1,0 +1,19 @@
+#!/usr/bin/env python3
+"""Run the repo-aware static analyzers (see docs/STATIC_ANALYSIS.md).
+
+Thin wrapper so the linter works from a clean checkout without an
+installed package: bootstraps ``src/`` onto ``sys.path`` and delegates to
+``repro.analysis.cli``.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""Repo-aware static analysis (``scripts/repolint.py`` is the CLI).
+
+The repo's hardest bug classes — mixing the four embedding id spaces
+(``docs/EMBEDDING_LAYOUT.md``), impure host code under ``jit`` /
+``pallas_call`` / ``custom_vjp``, over-budget Pallas VMEM staging, and
+unguarded cross-thread state — are invariants no general-purpose linter
+knows about. This package encodes them as AST rules (stdlib ``ast`` +
+``tokenize`` only, no new dependencies) so CI catches violations in
+seconds instead of relying on the bit-exactness test suites to trip over
+them. ``docs/STATIC_ANALYSIS.md`` documents every rule and the
+``# repolint: ignore[rule]`` suppression syntax.
+"""
+from repro.analysis.engine import (
+    AnalysisConfig, Finding, ModuleContext, Rule, all_rules, iter_python_files,
+    run_paths,
+)
+
+__all__ = [
+    "AnalysisConfig", "Finding", "ModuleContext", "Rule", "all_rules",
+    "iter_python_files", "run_paths",
+]

@@ -1,0 +1,91 @@
+"""``repolint`` CLI: run the repo-aware rules, exit nonzero on findings.
+
+Usage (via ``scripts/repolint.py``)::
+
+    python scripts/repolint.py src/                 # whole tree
+    python scripts/repolint.py --list-rules         # registry + summaries
+    python scripts/repolint.py --select id-space,pallas-vmem src/
+    python scripts/repolint.py --assume D=512 --vmem-cap-bytes $((32<<20)) src/
+
+Exit codes: 0 clean, 1 findings, 2 usage/parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.engine import AnalysisConfig, all_rules, run_paths
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(
+        prog="repolint",
+        description="Repo-aware static analysis (id-space, JAX purity, "
+                    "Pallas resources, thread safety, hygiene).")
+    parser.add_argument("paths", nargs="*", help="files or directories to lint")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print rule ids and summaries, then exit")
+    parser.add_argument("--select", default=None, metavar="RULES",
+                        help="comma-separated rule ids to run (default: all)")
+    parser.add_argument("--vmem-cap-bytes", type=int, default=None,
+                        metavar="N", help="pallas-vmem per-core cap override")
+    parser.add_argument("--assume", action="append", default=[],
+                        metavar="NAME=INT",
+                        help="bound a symbolic dimension for pallas-vmem "
+                             "(repeatable)")
+    return parser
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    rules = all_rules()
+
+    if args.list_rules:
+        width = max(len(r.id) for r in rules)
+        for rule in rules:
+            print(f"{rule.id:<{width}}  {rule.summary}")
+        return 0
+
+    if not args.paths:
+        parser.print_usage(sys.stderr)
+        print("repolint: error: no paths given (or use --list-rules)",
+              file=sys.stderr)
+        return 2
+
+    if args.select:
+        wanted = {r.strip() for r in args.select.split(",") if r.strip()}
+        known = {r.id for r in rules}
+        unknown = wanted - known
+        if unknown:
+            print(f"repolint: error: unknown rule(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.id in wanted]
+
+    config = AnalysisConfig()
+    if args.vmem_cap_bytes is not None:
+        config.vmem_cap_bytes = args.vmem_cap_bytes
+    for item in args.assume:
+        name, sep, value = item.partition("=")
+        if not sep or not name or not value.lstrip("-").isdigit():
+            print(f"repolint: error: bad --assume {item!r} (want NAME=INT)",
+                  file=sys.stderr)
+            return 2
+        config.assumed_dims[name] = int(value)
+
+    findings, errors = run_paths(args.paths, rules=rules, config=config)
+    for err in errors:
+        print(f"repolint: parse error: {err}", file=sys.stderr)
+    for finding in findings:
+        print(finding.render())
+    if findings or errors:
+        print(f"repolint: {len(findings)} finding(s), {len(errors)} parse "
+              f"error(s)", file=sys.stderr)
+        return 2 if errors and not findings else 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,52 @@
+"""silent-except: no bare excepts, no silently-swallowed exceptions.
+
+In a self-healing trainer, an exception that vanishes (``except X: pass``)
+is indistinguishable from success — the supervisor's restart accounting,
+the flash-checkpoint event log and the chaos tests all depend on failures
+leaving a trace. This rule flags:
+
+* ``except:`` with no exception type (catches ``KeyboardInterrupt`` /
+  ``SystemExit`` too, which breaks Ctrl-C and clean worker shutdown);
+* handlers whose entire body is ``pass`` / ``...`` — type the exception
+  *and* record it (event log, logger, counter) or re-raise.
+
+``except SomeError: <real handling>`` is fine; judging the quality of the
+handling is out of scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+
+def _is_noop(stmt: ast.stmt) -> bool:
+    if isinstance(stmt, ast.Pass):
+        return True
+    return (isinstance(stmt, ast.Expr)
+            and isinstance(stmt.value, ast.Constant)
+            and stmt.value.value is Ellipsis)
+
+
+class SilentExceptRule(Rule):
+    id = "silent-except"
+    summary = ("no bare `except:`; no `except X: pass` — record or re-raise "
+               "so failures leave a trace")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.finding(
+                    ctx, node,
+                    "bare `except:` also catches KeyboardInterrupt/SystemExit;"
+                    " name the exception type(s)")
+                continue
+            if all(_is_noop(s) for s in node.body):
+                caught = ast.unparse(node.type)
+                yield self.finding(
+                    ctx, node,
+                    f"`except {caught}` swallows the exception silently; "
+                    "log/record it (event log, counter) or re-raise")

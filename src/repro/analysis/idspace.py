@@ -1,0 +1,198 @@
+"""id-space: embedding row ids may only change space through a translator.
+
+The repo speaks four embedding id spaces (``docs/EMBEDDING_LAYOUT.md``):
+**raw** per-table-local ids, **flat** pooled rows (canonical), **encoded**
+hot indices (``-(slot+1)`` for cache hits, store rows otherwise), and
+**padded** physical rows (``shard * max_range + slot``). Mixing them
+compiles fine, runs fine on un-skewed shapes, and silently corrupts
+lookups/gradients under a real plan — the bug class only
+``test_padded_layout.py``-style bit-exactness runs catch at test time.
+
+This rule types variables by the repo's naming convention (``flat_idx``,
+``raw_ids``, ``padded_rows3``, ``encoded_idx`` ...) and enforces:
+
+* no assignment of one space's value to another space's name, unless it
+  flows through a sanctioned translator (``translate_rows``,
+  ``flat_to_padded``/``padded_to_flat``, ``encode_hot_indices``,
+  ``EmbeddingRemapper.remap_batch``, ``pad_rows``/``unpad_rows``);
+* no arithmetic/comparison directly mixing two spaces;
+* translator inputs must come from the space the translator consumes
+  (``translate_rows(padded_ids, ...)`` is the double-translation bug).
+
+The encoded space is a supertype by contract — flat (no layout) or padded
+(layout) rows are valid cold entries of an encoded stream — so flat→encoded
+and padded→encoded flow without a translator.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+SPACES = ("raw", "flat", "padded", "encoded")
+
+_SPACE_ALIASES = {"raw": "raw", "flat": "flat", "padded": "padded",
+                  "encoded": "encoded", "enc": "encoded"}
+_ID_TOKENS = {"id", "ids", "idx", "index", "indices", "row", "rows"}
+
+# translator name -> (input space of the first data argument, output space)
+TRANSLATORS: Dict[str, tuple] = {
+    "translate_rows": ("flat", "padded"),
+    "translate_rows_np": ("flat", "padded"),
+    "flat_to_padded": ("flat", "padded"),
+    "padded_to_flat": ("padded", "flat"),
+    "encode_hot_indices": ("flat", "encoded"),
+    "remap_batch": ("raw", "flat"),
+    "remap": ("raw", "flat"),
+    "pad_rows": ("flat", "padded"),
+    "unpad_rows": ("padded", "flat"),
+    "row_translation": (None, "padded"),
+    "hot_row_ids": (None, "flat"),
+}
+
+# target-space -> source spaces that may flow in without a translator
+_IMPLICIT_OK = {"encoded": {"encoded", "flat", "padded"},
+                "raw": {"raw"}, "flat": {"flat"}, "padded": {"padded"}}
+
+
+def classify(name: str) -> Optional[str]:
+    """Space of a variable name per the repo convention, or None.
+
+    A name carries a space when one end segment is a space word and another
+    segment (digits stripped) is an id token: ``flat_idx`` → flat,
+    ``padded_rows3`` → padded, ``ids_raw`` → raw; ``padded_shards``,
+    ``idx``, ``layout`` → None.
+    """
+    segs = [s.rstrip("0123456789") for s in name.lower().split("_") if s]
+    if len(segs) < 2:
+        return None
+    for space_seg, rest in ((segs[0], segs[1:]), (segs[-1], segs[:-1])):
+        space = _SPACE_ALIASES.get(space_seg)
+        if space and any(s in _ID_TOKENS for s in rest):
+            return space
+    return None
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    func = node.func
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+class _SpaceCollector(ast.NodeVisitor):
+    """Spaces carried by an expression; translator calls substitute their
+    output space and hide their (sanctioned) argument conversions."""
+
+    def __init__(self) -> None:
+        self.spaces: Set[str] = set()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node)
+        if name in TRANSLATORS:
+            out = TRANSLATORS[name][1]
+            if out:
+                self.spaces.add(out)
+            return  # args are consumed by the translator, not mixed in
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        return  # attribute chains (layout.padded_rows, ...) are geometry
+
+    def visit_Name(self, node: ast.Name) -> None:
+        space = classify(node.id)
+        if space:
+            self.spaces.add(space)
+
+
+def expr_spaces(node: ast.AST) -> Set[str]:
+    c = _SpaceCollector()
+    c.visit(node)
+    return c.spaces
+
+
+class IdSpaceRule(Rule):
+    id = "id-space"
+    summary = ("embedding ids must pass through a sanctioned translator "
+               "to change id space (raw/flat/encoded/padded)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in TRANSLATORS:
+                continue  # translator implementations convert by definition
+            if self._inside_translator_def(ctx, node):
+                continue
+            if isinstance(node, ast.Assign):
+                for target in node.targets:
+                    yield from self._check_assign(ctx, target, node.value)
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)) \
+                    and node.value is not None:
+                yield from self._check_assign(ctx, node.target, node.value)
+            elif isinstance(node, (ast.BinOp, ast.Compare)):
+                yield from self._check_mixing(ctx, node)
+            elif isinstance(node, ast.Call):
+                yield from self._check_translator_input(ctx, node)
+
+    def _inside_translator_def(self, ctx: ModuleContext, node: ast.AST) -> bool:
+        return any(isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))
+                   and p.name in TRANSLATORS for p in ctx.parents(node))
+
+    def _check_assign(self, ctx: ModuleContext, target: ast.AST,
+                      value: ast.AST) -> Iterator[Finding]:
+        if isinstance(target, (ast.Tuple, ast.List)) \
+                and isinstance(value, (ast.Tuple, ast.List)) \
+                and len(target.elts) == len(value.elts):
+            for t, v in zip(target.elts, value.elts):
+                yield from self._check_assign(ctx, t, v)
+            return
+        if not isinstance(target, ast.Name):
+            return
+        tspace = classify(target.id)
+        if tspace is None:
+            return
+        bad = expr_spaces(value) - _IMPLICIT_OK[tspace]
+        for space in sorted(bad):
+            yield self.finding(
+                ctx, value,
+                f"{space}-space value assigned to {tspace}-space name "
+                f"'{target.id}' without a sanctioned translator "
+                f"(see docs/EMBEDDING_LAYOUT.md)")
+
+    def _check_mixing(self, ctx: ModuleContext, node: ast.AST) -> Iterator[Finding]:
+        if isinstance(node, ast.BinOp):
+            operands = [node.left, node.right]
+        else:
+            operands = [node.left] + list(node.comparators)
+        per_operand = [expr_spaces(o) for o in operands]
+        distinct = set().union(*per_operand)
+        if len(distinct) < 2:
+            return
+        # only flag when the spaces come from *different* operands — a single
+        # operand's interior (e.g. a jnp.where select) is judged at its own
+        # assignment, not here
+        single = [s for s in per_operand if len(s) == 1]
+        if len({next(iter(s)) for s in single}) >= 2:
+            a, b = sorted(distinct)[:2]
+            yield self.finding(
+                ctx, node,
+                f"expression mixes {a}-space and {b}-space ids directly; "
+                f"translate one side first (see docs/EMBEDDING_LAYOUT.md)")
+
+    def _check_translator_input(self, ctx: ModuleContext,
+                                node: ast.Call) -> Iterator[Finding]:
+        name = _call_name(node)
+        if name not in TRANSLATORS or not node.args:
+            return
+        expect = TRANSLATORS[name][0]
+        if expect is None:
+            return
+        got = expr_spaces(node.args[0]) - {expect}
+        for space in sorted(got):
+            yield self.finding(
+                ctx, node,
+                f"translator '{name}' consumes {expect}-space ids but was "
+                f"given a {space}-space value (double translation?)")

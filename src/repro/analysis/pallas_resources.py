@@ -1,0 +1,267 @@
+"""pallas-vmem / pallas-dma: static resource checks on Pallas kernels.
+
+**pallas-vmem** — a ``pallas_call``'s on-chip footprint is decidable from
+its call site: BlockSpec block shapes (×2: the grid pipeline
+double-buffers every blocked operand) plus ``scratch_shapes`` VMEM
+allocations. The checker evaluates the shape expressions with a table of
+worst-case dimension bounds (``AnalysisConfig.assumed_dims``, CLI
+``--assume NAME=VALUE``) and flags kernels whose upper-bound estimate
+exceeds the per-core VMEM cap (default 16 MiB). An over-budget kernel
+compiles on the interpret path CI runs and only explodes on real TPUs —
+exactly the failure a static bound catches early. SMEM blocks and
+``memory_space=ANY`` operands (manual-DMA HBM residents) don't occupy
+VMEM blocks and are excluded.
+
+**pallas-dma** — every manually-issued DMA (``pltpu.make_async_copy(...)
+.start()``) must have a matching ``.wait()`` on the *same semaphore
+expression* somewhere in the module (start and wait legitimately live in
+different helpers, e.g. a fill/drain pair). A started-but-never-awaited
+copy races the buffer consumer; the interpret path hides it.
+"""
+from __future__ import annotations
+
+import ast
+import math
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+from repro.analysis.purity import _attr_chain
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+}
+
+
+def _eval_dim(node: ast.AST, dims: Dict[str, int], default: int) -> int:
+    """Upper-bound a block-shape dimension expression."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)):
+        return int(node.value)
+    if isinstance(node, ast.Name):
+        return dims.get(node.id, default)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return -_eval_dim(node.operand, dims, default)
+    if isinstance(node, ast.BinOp):
+        left = _eval_dim(node.left, dims, default)
+        right = _eval_dim(node.right, dims, default)
+        if isinstance(node.op, ast.Add):
+            return left + right
+        if isinstance(node.op, ast.Sub):
+            return left - right
+        if isinstance(node.op, ast.Mult):
+            return left * right
+        if isinstance(node.op, (ast.Div, ast.FloorDiv)):
+            return left // max(right, 1)
+        if isinstance(node.op, ast.Mod):
+            return max(right - 1, 0)
+        if isinstance(node.op, ast.Pow):
+            return left ** right
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        vals = [_eval_dim(a, dims, default) for a in node.args]
+        if chain and vals:
+            if chain[-1] == "max":
+                return max(vals)
+            if chain[-1] == "min":
+                return min(vals)
+            if chain[-1] == "cdiv" and len(vals) == 2:
+                return math.ceil(vals[0] / max(vals[1], 1))
+    return default  # unresolvable: fall back to the configured bound
+
+
+def _dtype_bytes(node: Optional[ast.AST]) -> int:
+    if node is None:
+        return 4
+    chain = _attr_chain(node)
+    if chain and chain[-1] in _DTYPE_BYTES:
+        return _DTYPE_BYTES[chain[-1]]
+    return 4  # unknown (e.g. pool.dtype): assume full-width f32
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _as_elements(node: Optional[ast.AST]) -> List[ast.AST]:
+    if node is None:
+        return []
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+class VmemBudgetRule(Rule):
+    id = "pallas-vmem"
+    summary = ("per-kernel VMEM upper bound (2x blocked operands + scratch, "
+               "worst-case dims) must fit the per-core cap")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        dims = ctx.config.assumed_dims
+        default = ctx.config.default_dim
+        cap = ctx.config.vmem_cap_bytes
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain or chain[-1] != "pallas_call":
+                continue
+            parts: List[Tuple[str, int]] = []
+            for label, spec in self._block_specs(ctx, node):
+                nbytes = self._blockspec_bytes(spec, dims, default)
+                if nbytes:
+                    parts.append((label, 2 * nbytes))  # pipeline double-buffer
+            for scratch in _as_elements(_kw(node, "scratch_shapes")):
+                nbytes = self._scratch_bytes(scratch, dims, default)
+                if nbytes:
+                    parts.append(("scratch", nbytes))
+            total = sum(b for _, b in parts)
+            if total > cap:
+                detail = " + ".join(f"{label}:{b // 1024}KiB"
+                                    for label, b in parts)
+                yield self.finding(
+                    ctx, node,
+                    f"kernel VMEM upper bound {total / 2**20:.1f} MiB exceeds "
+                    f"the {cap / 2**20:.1f} MiB cap ({detail}); shrink block "
+                    "shapes or raise --vmem-cap-bytes with a justification")
+
+    def _block_specs(self, ctx: ModuleContext, call: ast.Call
+                     ) -> Iterator[Tuple[str, ast.Call]]:
+        """Yield (label, BlockSpec call) for in/out specs, incl. grid_spec."""
+        sources = [("in", _kw(call, "in_specs")), ("out", _kw(call, "out_specs"))]
+        grid_spec = _kw(call, "grid_spec")
+        if grid_spec is None and call.args:
+            maybe = call.args[1] if len(call.args) > 1 else None
+            if isinstance(maybe, ast.Call):
+                grid_spec = maybe
+        if isinstance(grid_spec, ast.Call):
+            sources += [("in", _kw(grid_spec, "in_specs")),
+                        ("out", _kw(grid_spec, "out_specs"))]
+        elif isinstance(grid_spec, ast.Name):
+            spec_def = self._resolve_local(ctx, grid_spec.id)
+            if isinstance(spec_def, ast.Call):
+                sources += [("in", _kw(spec_def, "in_specs")),
+                            ("out", _kw(spec_def, "out_specs"))]
+        for label, src in sources:
+            for el in _as_elements(src):
+                target = el
+                if isinstance(el, ast.Name):
+                    target = self._resolve_local(ctx, el.id)
+                if isinstance(target, ast.Call):
+                    tchain = _attr_chain(target.func)
+                    if tchain and tchain[-1] == "BlockSpec":
+                        yield label, target
+
+    @staticmethod
+    def _resolve_local(ctx: ModuleContext, name: str) -> Optional[ast.AST]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and node.targets[0].id == name:
+                return node.value
+        return None
+
+    @staticmethod
+    def _blockspec_bytes(spec: ast.Call, dims: Dict[str, int],
+                         default: int) -> int:
+        mem = _kw(spec, "memory_space")
+        if mem is not None:
+            mchain = _attr_chain(mem)
+            if mchain and mchain[-1] in ("SMEM", "ANY"):
+                return 0  # not a VMEM block
+        if not spec.args:
+            return 0  # whole-operand spec (memory decided by the compiler)
+        shape = spec.args[0]
+        if not isinstance(shape, (ast.Tuple, ast.List)):
+            return 0
+        n = 1
+        for dim in shape.elts:
+            n *= max(_eval_dim(dim, dims, default), 1)
+        return n * 4  # BlockSpec carries no dtype; assume f32
+
+    @staticmethod
+    def _scratch_bytes(node: ast.AST, dims: Dict[str, int],
+                       default: int) -> int:
+        if not isinstance(node, ast.Call):
+            return 0
+        chain = _attr_chain(node.func)
+        if not chain or chain[-1] != "VMEM":
+            return 0  # SMEM scratch / semaphores don't consume VMEM
+        if not node.args:
+            return 0
+        shape = node.args[0]
+        if not isinstance(shape, (ast.Tuple, ast.List)):
+            return 0
+        n = 1
+        for dim in shape.elts:
+            n *= max(_eval_dim(dim, dims, default), 1)
+        dtype = node.args[1] if len(node.args) > 1 else None
+        return n * _dtype_bytes(dtype)
+
+
+class DmaPairingRule(Rule):
+    id = "pallas-dma"
+    summary = ("every make_async_copy(...).start() needs a matching .wait() "
+               "on the same semaphore expression in the module")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        started: Dict[str, ast.AST] = {}
+        waited: Set[str] = set()
+        copy_names: Dict[str, str] = {}   # var name -> semaphore expr
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if chain and chain[-1] == "make_async_copy":
+                sem = self._sem_expr(node)
+                use = self._immediate_use(ctx, node)
+                if use == "start":
+                    started.setdefault(sem, node)
+                elif use == "wait":
+                    waited.add(sem)
+                else:
+                    assigned = self._assigned_name(ctx, node)
+                    if assigned:
+                        copy_names[assigned] = sem
+            elif isinstance(node.func, ast.Attribute) \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id in copy_names:
+                sem = copy_names[node.func.value.id]
+                if node.func.attr == "start":
+                    started.setdefault(sem, node)
+                elif node.func.attr == "wait":
+                    waited.add(sem)
+        for sem, node in started.items():
+            if sem not in waited:
+                yield self.finding(
+                    ctx, node,
+                    f"DMA started on semaphore `{sem}` is never awaited in "
+                    "this module; add the matching .wait() (unwaited copies "
+                    "race their consumer)")
+
+    @staticmethod
+    def _sem_expr(call: ast.Call) -> str:
+        if len(call.args) >= 3:
+            return ast.unparse(call.args[2])
+        kw = _kw(call, "sem")
+        return ast.unparse(kw) if kw is not None else "<none>"
+
+    @staticmethod
+    def _immediate_use(ctx: ModuleContext, call: ast.Call) -> Optional[str]:
+        parent = ctx.parent(call)
+        if isinstance(parent, ast.Attribute) and parent.attr in ("start",
+                                                                 "wait"):
+            return parent.attr
+        return None
+
+    @staticmethod
+    def _assigned_name(ctx: ModuleContext, call: ast.Call) -> Optional[str]:
+        parent = ctx.parent(call)
+        if isinstance(parent, ast.Assign) and len(parent.targets) == 1 \
+                and isinstance(parent.targets[0], ast.Name):
+            return parent.targets[0].id
+        return None

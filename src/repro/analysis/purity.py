@@ -1,0 +1,357 @@
+"""jax-purity / unseeded-random: host effects where tracing can't see them.
+
+``jit``/``pallas_call``/``custom_vjp`` trace a function **once** and replay
+the recorded computation: host-side effects inside traced code run at trace
+time only (or worse, once per recompile), so RNG draws freeze, prints lie,
+closed-over mutations desync, and ``if`` on a tracer raises
+``TracerBoolConversionError`` only on the first data-dependent shape that
+reaches it. This module finds traced code statically and flags the classic
+impurities before a recompile makes them load-bearing.
+
+Traced roots are found per module: decorators (``@jax.jit``,
+``@functools.partial(jax.custom_vjp, ...)``) and higher-order call sites
+(``jax.jit(f)``, ``jax.grad``/``value_and_grad``, ``jax.vmap``,
+``pl.pallas_call(kernel, ...)``, ``lax.scan``/``cond``/``while_loop``,
+``f.defvjp(fwd, bwd)``), following ``functools.partial`` aliases; the local
+call graph is then walked conservatively (any reference to a module-local
+function inside traced code marks it traced). Cross-module calls are not
+followed — each module is judged on its own traced surface.
+
+``unseeded-random`` is the determinism half: every replay surface in this
+repo (fault plans, chaos runs, benchmarks) is seeded by contract, so global
+NumPy/stdlib RNG state — seeded or not — is flagged everywhere, not just
+under ``jit``. Use ``np.random.default_rng(seed)`` / ``random.Random(seed)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+_TRACING_HOFS = {"jit", "grad", "value_and_grad", "vmap", "pmap", "pallas_call",
+                 "custom_vjp", "custom_jvp", "scan", "cond", "while_loop",
+                 "fori_loop", "checkpoint", "remat", "defvjp", "defjvp"}
+_IMPURE_CALLS = {"print", "input", "open", "exec", "eval"}
+_TIME_FNS = {"time", "perf_counter", "monotonic", "process_time", "sleep"}
+_TRACED_VALUE_ROOTS = {"jnp", "lax"}  # jnp.* / lax.* / jax.lax.* produce tracers
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "at"}
+
+
+def _attr_chain(node: ast.AST) -> List[str]:
+    """``jax.lax.scan`` -> ["jax", "lax", "scan"]; [] when not a pure chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def _is_np_random(chain: List[str]) -> bool:
+    return len(chain) >= 2 and chain[0] in ("np", "numpy") and chain[1] == "random"
+
+
+class _FunctionIndex:
+    """All named function/lambda definitions of a module (nested included)."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.defs: Dict[str, ast.AST] = {}
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, node)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                src = self._callable_name(node.value)
+                if src:
+                    self.aliases[node.targets[0].id] = src
+
+    @staticmethod
+    def _callable_name(value: ast.AST) -> Optional[str]:
+        # k = functools.partial(f, ...) / k = jax.jit(f): k stands for f
+        if isinstance(value, ast.Call):
+            chain = _attr_chain(value.func)
+            if chain and chain[-1] in _TRACING_HOFS | {"partial"} \
+                    and value.args and isinstance(value.args[0], ast.Name):
+                return value.args[0].id
+        if isinstance(value, ast.Name):
+            return value.id
+        return None
+
+    def resolve(self, name: str) -> Optional[ast.AST]:
+        seen = set()
+        while name in self.aliases and name not in seen:
+            seen.add(name)
+            name = self.aliases[name]
+        return self.defs.get(name)
+
+
+def find_traced_roots(tree: ast.Module, index: _FunctionIndex
+                      ) -> Set[ast.AST]:
+    """Function nodes that are entry points into traced execution."""
+    roots: Set[ast.AST] = set()
+
+    def add(name_or_node: object) -> None:
+        if isinstance(name_or_node, ast.Lambda):
+            roots.add(name_or_node)
+        elif isinstance(name_or_node, str):
+            node = index.resolve(name_or_node)
+            if node is not None:
+                roots.add(node)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                chain = _attr_chain(dec.func if isinstance(dec, ast.Call)
+                                    else dec)
+                if chain and chain[-1] in _TRACING_HOFS:
+                    roots.add(node)
+                # @functools.partial(jax.custom_vjp, ...) etc.
+                if isinstance(dec, ast.Call) and chain \
+                        and chain[-1] == "partial" and dec.args:
+                    inner = _attr_chain(dec.args[0])
+                    if inner and inner[-1] in _TRACING_HOFS:
+                        roots.add(node)
+        elif isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if not chain or chain[-1] not in _TRACING_HOFS:
+                continue
+            for arg in node.args[:2 if chain[-1] in ("cond", "defvjp",
+                                                     "defjvp") else 1]:
+                if isinstance(arg, ast.Name):
+                    add(arg.id)
+                elif isinstance(arg, ast.Lambda):
+                    add(arg)
+            if chain[-1] in ("defvjp", "defjvp"):
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        add(arg.id)
+    return roots
+
+
+def traced_functions(tree: ast.Module) -> Set[ast.AST]:
+    """Roots plus every module-local function referenced from traced code."""
+    index = _FunctionIndex(tree)
+    frontier = list(find_traced_roots(tree, index))
+    traced: Set[ast.AST] = set()
+    while frontier:
+        fn = frontier.pop()
+        if fn in traced:
+            continue
+        traced.add(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name):
+                callee = index.resolve(node.id)
+                if callee is not None and callee is not fn:
+                    frontier.append(callee)
+    return traced
+
+
+class JaxPurityRule(Rule):
+    id = "jax-purity"
+    summary = ("no host side effects, host RNG, closed-over mutation, or "
+               "host branching on traced values inside jit/pallas/custom_vjp "
+               "code")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        traced = traced_functions(ctx.tree)
+        seen_lines: Set[Tuple[int, int]] = set()
+        for fn in traced:
+            for f in self._check_function(ctx, fn, traced):
+                key = (f.line, f.col)
+                if key not in seen_lines:   # nested traced fns double-walk
+                    seen_lines.add(key)
+                    yield f
+
+    def _check_function(self, ctx: ModuleContext, fn: ast.AST,
+                        traced: Set[ast.AST]) -> Iterator[Finding]:
+        local_names = self._local_bindings(fn)
+        tracer_names = self._tracer_assigned_names(fn)
+        for node in ast.walk(fn):
+            # report nested defs once, when walked as their own traced entry
+            if node is not fn and node in traced:
+                continue
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                yield self.finding(
+                    ctx, node,
+                    f"traced function mutates {type(node).__name__.lower()} "
+                    f"state ({', '.join(node.names)}); thread values through "
+                    "arguments/returns instead")
+            elif isinstance(node, ast.Call):
+                yield from self._check_call(ctx, node)
+                yield from self._check_closure_mutation(ctx, node, local_names)
+            elif isinstance(node, (ast.If, ast.While)):
+                yield from self._check_host_branch(ctx, node.test, tracer_names)
+            elif isinstance(node, ast.IfExp):
+                yield from self._check_host_branch(ctx, node.test, tracer_names)
+
+    @staticmethod
+    def _local_bindings(fn: ast.AST) -> Set[str]:
+        names: Set[str] = set()
+        args = getattr(fn, "args", None)
+        if args is not None:
+            for a in (args.posonlyargs + args.args + args.kwonlyargs
+                      + ([args.vararg] if args.vararg else [])
+                      + ([args.kwarg] if args.kwarg else [])):
+                names.add(a.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                names.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                names.add(node.name)
+        return names
+
+    @staticmethod
+    def _tracer_assigned_names(fn: ast.AST) -> Set[str]:
+        """Names assigned from jnp/lax calls — likely tracers at runtime."""
+        out: Set[str] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            produces_tracer = any(
+                (chain := _attr_chain(c.func)) and (
+                    chain[0] in _TRACED_VALUE_ROOTS
+                    or (len(chain) >= 2 and chain[0] == "jax"
+                        and chain[1] in ("lax", "numpy", "nn")))
+                for c in ast.walk(node.value) if isinstance(c, ast.Call))
+            if produces_tracer:
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            out.add(n.id)
+        return out
+
+    def _check_call(self, ctx: ModuleContext, node: ast.Call
+                    ) -> Iterator[Finding]:
+        chain = _attr_chain(node.func)
+        if not chain:
+            return
+        if chain == ["print"] or (len(chain) == 1
+                                  and chain[0] in _IMPURE_CALLS):
+            yield self.finding(
+                ctx, node,
+                f"host `{chain[0]}` inside traced code runs at trace time "
+                "only; use jax.debug.* or hoist it out of the jitted region")
+        elif _is_np_random(chain) or chain[0] == "random":
+            yield self.finding(
+                ctx, node,
+                f"host RNG `{'.'.join(chain)}` inside traced code freezes at "
+                "trace time; use jax.random with an explicit key")
+        elif chain[0] == "time" and chain[-1] in _TIME_FNS:
+            yield self.finding(
+                ctx, node,
+                f"`{'.'.join(chain)}` inside traced code measures trace "
+                "time, not step time; time outside the jitted callable")
+
+    def _check_closure_mutation(self, ctx: ModuleContext, node: ast.Call,
+                                local_names: Set[str]) -> Iterator[Finding]:
+        if not isinstance(node.func, ast.Attribute):
+            return
+        if node.func.attr not in ("append", "extend", "update", "add",
+                                  "insert", "setdefault", "pop", "remove"):
+            return
+        base = node.func.value
+        if isinstance(base, ast.Name) and base.id not in local_names:
+            yield self.finding(
+                ctx, node,
+                f"traced function mutates closed-over `{base.id}."
+                f"{node.func.attr}(...)`; the effect happens once at trace "
+                "time, not per step")
+
+    def _check_host_branch(self, ctx: ModuleContext, test: ast.AST,
+                           tracer_names: Set[str]) -> Iterator[Finding]:
+        # `x is None` / `x is not None` is an identity test on the python
+        # object, decided at trace time — static even when x is a tracer
+        static_nodes: Set[ast.AST] = set()
+        for cmp_node in ast.walk(test):
+            if isinstance(cmp_node, ast.Compare) \
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in cmp_node.ops):
+                static_nodes.update(ast.walk(cmp_node))
+        for node in ast.walk(test):
+            if node in static_nodes:
+                continue
+            chain: List[str] = []
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+            elif isinstance(node, ast.Name) and node.id in tracer_names:
+                if not self._under_static_attr(ctx, node, test):
+                    yield self.finding(
+                        ctx, test,
+                        f"host `if`/`while` on traced value `{node.id}`; "
+                        "use lax.cond/jnp.where or make it static")
+                continue
+            if chain and (chain[0] in _TRACED_VALUE_ROOTS
+                          or (len(chain) >= 2 and chain[0] == "jax"
+                              and chain[1] in ("lax", "numpy", "nn"))):
+                yield self.finding(
+                    ctx, test,
+                    f"host `if`/`while` on traced expression "
+                    f"`{'.'.join(chain)}(...)`; use lax.cond/jnp.where")
+
+    def _under_static_attr(self, ctx: ModuleContext, node: ast.AST,
+                           stop: ast.AST) -> bool:
+        """True when the tracer only feeds .shape/.dtype/... (static) reads."""
+        cur = ctx.parent(node)
+        while cur is not None:
+            if isinstance(cur, ast.Attribute) and cur.attr in _STATIC_ATTRS:
+                return True
+            if cur is stop:
+                return False
+            cur = ctx.parent(cur)
+        return False
+
+
+_LEGACY_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf", "sample",
+    "choice", "shuffle", "permutation", "uniform", "normal", "standard_normal",
+    "poisson", "beta", "binomial", "bytes", "exponential", "gamma",
+    "geometric", "lognormal", "seed", "get_state", "set_state",
+}
+_STDLIB_RANDOM = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle", "sample",
+    "uniform", "gauss", "normalvariate", "seed", "getrandbits", "betavariate",
+    "expovariate",
+}
+
+
+class UnseededRandomRule(Rule):
+    id = "unseeded-random"
+    summary = ("no global/unseeded RNG state anywhere: benchmarks and chaos "
+               "runs must replay bit-identically "
+               "(np.random.default_rng(seed), random.Random(seed))")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            if _is_np_random(chain) and len(chain) == 3:
+                if chain[2] == "default_rng":
+                    if not node.args and not node.keywords:
+                        yield self.finding(
+                            ctx, node,
+                            "np.random.default_rng() without a seed is "
+                            "unreproducible; pass an explicit seed")
+                elif chain[2] in _LEGACY_NP_RANDOM:
+                    yield self.finding(
+                        ctx, node,
+                        f"legacy global-state RNG `{'.'.join(chain)}(...)`; "
+                        "use np.random.default_rng(seed) so runs replay")
+            elif chain[0] == "random" and len(chain) == 2:
+                if chain[1] in _STDLIB_RANDOM:
+                    yield self.finding(
+                        ctx, node,
+                        f"stdlib global RNG `random.{chain[1]}(...)`; use a "
+                        "seeded random.Random(seed) instance")
+                elif chain[1] == "Random" and not node.args:
+                    yield self.finding(
+                        ctx, node,
+                        "random.Random() without a seed is unreproducible; "
+                        "pass an explicit seed")

@@ -1,0 +1,224 @@
+"""thread-safety: cross-thread attribute state must be lock-guarded.
+
+The trainer is deliberately multi-threaded: ``Supervisor`` runs training
+attempts on worker threads, ``DLRMJob`` is driven by a watchdog thread
+while the main loop reads its state, ``FlashCheckpoint`` persists from a
+pool thread. The failure mode is an attribute written under a class's
+lock in one method and written bare in another — both paths "work" until
+a preemption lands between them.
+
+Per class that owns a lock (``self._lock = threading.Lock()/RLock()/
+Condition()`` in ``__init__``), this rule computes:
+
+* **lock regions** — statements inside ``with self._lock:``;
+* **effectively-locked methods** — private helpers whose every call site
+  (outside ``__init__``) is itself inside a lock region or another
+  effectively-locked method (fixed point), so their bodies inherit the
+  lock;
+* **guarded attributes** — attributes ever written inside a lock region
+  or an effectively-locked method.
+
+A write to a guarded attribute outside all of the above (and outside
+``__init__`` — construction is single-threaded by Python semantics) is a
+finding. Classes with *no* lock are checked for the cruder hazard: a
+method handed to ``threading.Thread(target=...)`` / ``pool.submit`` that
+writes an attribute some other method also writes.
+
+Deliberately-atomic unguarded attributes (single machine-word stores read
+by monitors) are suppressed per line with a justification::
+
+    self.seen += 1  # repolint: ignore[thread-safety] -- monotonic counter, torn reads benign
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+from repro.analysis.purity import _attr_chain
+
+_LOCK_TYPES = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+_MUTATORS = {"append", "extend", "update", "add", "insert", "setdefault",
+             "pop", "popitem", "remove", "discard", "clear"}
+
+
+def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+    attrs: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not isinstance(node.value, ast.Call):
+            continue
+        chain = _attr_chain(node.value.func)
+        if not chain or chain[-1] not in _LOCK_TYPES:
+            continue
+        for target in node.targets:
+            if isinstance(target, ast.Attribute) \
+                    and isinstance(target.value, ast.Name) \
+                    and target.value.id == "self":
+                attrs.add(target.attr)
+    return attrs
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class _ClassModel:
+    """Writes, self-calls and lock regions of one class, per method."""
+
+    def __init__(self, ctx: ModuleContext, cls: ast.ClassDef,
+                 lock_attrs: Set[str]) -> None:
+        self.ctx = ctx
+        self.cls = cls
+        self.lock_attrs = lock_attrs
+        self.methods: Dict[str, ast.FunctionDef] = {
+            stmt.name: stmt for stmt in cls.body
+            if isinstance(stmt, ast.FunctionDef)}
+        # (method, attr, node, in_lock)
+        self.writes: List[Tuple[str, str, ast.AST, bool]] = []
+        # callee -> list of (caller_method, in_lock)
+        self.calls: Dict[str, List[Tuple[str, bool]]] = {}
+        self.thread_entries: Set[str] = set()
+        for name, fn in self.methods.items():
+            self._scan_method(name, fn)
+
+    def _in_lock(self, node: ast.AST) -> bool:
+        for parent in self.ctx.parents(node):
+            if isinstance(parent, ast.With):
+                for item in parent.items:
+                    attr = _self_attr(item.context_expr)
+                    if attr in self.lock_attrs:
+                        return True
+            if parent is self.cls:
+                break
+        return False
+
+    def _scan_method(self, method: str, fn: ast.FunctionDef) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for target in targets:
+                    attr = self._written_attr(target)
+                    if attr:
+                        self.writes.append(
+                            (method, attr, node, self._in_lock(node)))
+            elif isinstance(node, ast.Call):
+                self._scan_call(method, node)
+
+    @staticmethod
+    def _written_attr(target: ast.AST) -> Optional[str]:
+        attr = _self_attr(target)
+        if attr:
+            return attr
+        if isinstance(target, ast.Subscript):
+            return _self_attr(target.value)
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                inner = _ClassModel._written_attr(el)
+                if inner:
+                    return inner
+        return None
+
+    def _scan_call(self, method: str, node: ast.Call) -> None:
+        func = node.func
+        # self.helper(...)
+        callee = None
+        if isinstance(func, ast.Attribute):
+            callee = _self_attr(func)
+        if callee and callee in self.methods:
+            self.calls.setdefault(callee, []).append(
+                (method, self._in_lock(node)))
+        # container mutation: self.attr.append(...)
+        if isinstance(func, ast.Attribute) and func.attr in _MUTATORS:
+            attr = _self_attr(func.value)
+            if attr:
+                self.writes.append((method, attr, node, self._in_lock(node)))
+        # thread handoff: Thread(target=self.m) / pool.submit(self.m, ...)
+        chain = _attr_chain(func)
+        if chain and chain[-1] == "Thread":
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    entry = _self_attr(kw.value)
+                    if entry:
+                        self.thread_entries.add(entry)
+        if chain and chain[-1] == "submit" and node.args:
+            entry = _self_attr(node.args[0])
+            if entry:
+                self.thread_entries.add(entry)
+
+    def effectively_locked(self) -> Set[str]:
+        """Methods whose every non-``__init__`` call site holds the lock."""
+        locked: Set[str] = set()
+        changed = True
+        while changed:
+            changed = False
+            for callee, sites in self.calls.items():
+                if callee in locked or callee == "__init__":
+                    continue
+                outside = [(m, il) for m, il in sites if m != "__init__"]
+                if not outside:
+                    continue  # only constructed-time calls: not lock evidence
+                if all(il or m in locked for m, il in outside):
+                    locked.add(callee)
+                    changed = True
+        return locked
+
+
+class ThreadSafetyRule(Rule):
+    id = "thread-safety"
+    summary = ("attributes guarded by a class lock anywhere must be guarded "
+               "everywhere (or suppressed with an atomicity justification)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            lock_attrs = _lock_attrs(node)
+            if lock_attrs:
+                yield from self._check_locked_class(ctx, node, lock_attrs)
+            else:
+                yield from self._check_lockless_class(ctx, node)
+
+    def _check_locked_class(self, ctx: ModuleContext, cls: ast.ClassDef,
+                            lock_attrs: Set[str]) -> Iterator[Finding]:
+        model = _ClassModel(ctx, cls, lock_attrs)
+        eff_locked = model.effectively_locked()
+        guarded: Set[str] = set()
+        for method, attr, _node, in_lock in model.writes:
+            if in_lock or (method in eff_locked and method != "__init__"):
+                guarded.add(attr)
+        guarded -= lock_attrs
+        for method, attr, wnode, in_lock in model.writes:
+            if attr not in guarded or method == "__init__":
+                continue
+            if in_lock or method in eff_locked:
+                continue
+            yield self.finding(
+                ctx, wnode,
+                f"{cls.name}.{attr} is written under {cls.name}'s lock "
+                f"elsewhere but written bare in {method}(); hold the lock or "
+                "suppress with an atomicity justification")
+
+    def _check_lockless_class(self, ctx: ModuleContext,
+                              cls: ast.ClassDef) -> Iterator[Finding]:
+        model = _ClassModel(ctx, cls, set())
+        if not model.thread_entries:
+            return
+        writes_by_attr: Dict[str, Set[str]] = {}
+        for method, attr, _node, _ in model.writes:
+            writes_by_attr.setdefault(attr, set()).add(method)
+        for method, attr, wnode, _ in model.writes:
+            if method not in model.thread_entries:
+                continue
+            others = writes_by_attr[attr] - {method, "__init__"}
+            if others:
+                yield self.finding(
+                    ctx, wnode,
+                    f"{cls.name}.{attr} is written from spawned thread "
+                    f"{method}() and from {sorted(others)[0]}() but "
+                    f"{cls.name} has no lock; add one")

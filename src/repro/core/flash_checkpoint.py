@@ -116,6 +116,15 @@ class FlashCheckpoint:
 
     def _event(self, kind: str, **detail) -> None:
         self.events.append({"kind": kind, "t": time.time(), **detail})
+
+    def note(self, kind: str, **detail) -> None:
+        """Record an externally-observed event into this store's log.
+
+        Public seam for callers (the supervisor's restore fallbacks) so
+        their recovery decisions land next to the store's own skip/corrupt
+        records instead of vanishing.
+        """
+        self._event(kind, **detail)
         logger.warning("flash_checkpoint %s: %s", kind, detail)
 
     # ------------------------------------------------------------------ save
@@ -236,8 +245,8 @@ class FlashCheckpoint:
             try:
                 self._load_disk(step)
                 out.append(step)
-            except CheckpointCorruptError:
-                pass
+            except CheckpointCorruptError as e:
+                self._event("corrupt_blob_skipped", step=step, error=str(e))
         return out
 
     def _load_disk(self, step: int) -> Dict[str, np.ndarray]:

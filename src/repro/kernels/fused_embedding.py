@@ -431,15 +431,15 @@ def _fused_bwd(meta, res, g):
     combiner, B, T, H, method, block_b, hot, layout = meta
     pool, flat_idx, weights = res
     R, D = pool.shape
-    if layout is not None:
-        # deposit gradients into the padded row space; padding slots are
-        # never addressed, so they receive exactly zero
-        flat_idx = translate_rows(flat_idx, layout)
+    # gradients deposit into the physical store's row space: flat rows when
+    # the pool is unpadded, padded rows under a layout (whose padding slots
+    # are never addressed, so they receive exactly zero)
+    store_idx = flat_idx if layout is None else translate_rows(flat_idx, layout)
     g = g.astype(jnp.float32)                              # (B, T, D)
     w = None if weights is None else weights.reshape(B, T, H)
 
     if combiner == "max":
-        rows = jnp.take(pool, flat_idx, axis=0).reshape(B, T, H, D)
+        rows = jnp.take(pool, store_idx, axis=0).reshape(B, T, H, D)
         rows = rows.astype(jnp.float32)
         v = rows if w is None else rows * w[..., None]
         m = jnp.max(v, axis=2)                             # (B, T, D)
@@ -459,14 +459,14 @@ def _fused_bwd(meta, res, g):
             dw = None
             g_rows = g_v
         else:
-            rows = jnp.take(pool, flat_idx, axis=0).reshape(B, T, H, D)
+            rows = jnp.take(pool, store_idx, axis=0).reshape(B, T, H, D)
             dw = jnp.sum(g_v * rows.astype(jnp.float32), axis=-1)
             g_rows = g_v * w[..., None]
 
     # Sparse-gradient aggregation: duplicate global rows are deduplicated and
     # scatter-added in one fused segment reduction over the flat indices.
     dpool = jax.ops.segment_sum(
-        g_rows.reshape(B * T * H, D), flat_idx, num_segments=R)
+        g_rows.reshape(B * T * H, D), store_idx, num_segments=R)
     dweights = None if dw is None else dw.reshape(weights.shape).astype(
         weights.dtype)
     return dpool.astype(pool.dtype), None, dweights

@@ -105,8 +105,10 @@ def attn_decode(p, x, kv_cache, cache_pos, step, cfg: ModelConfig, kind: str):
     pos_b = jnp.full((B,), step, jnp.int32)
     q, k, v = _project_qkv(p, x, cfg, pos_b[:, None], kind)
     idx = jnp.mod(step, Lc) if kind == "local" else jnp.minimum(step, Lc - 1)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k.astype(kv_cache["k"].dtype), idx, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v.astype(kv_cache["v"].dtype), idx, axis=1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        kv_cache["k"], k.astype(kv_cache["k"].dtype), idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        kv_cache["v"], v.astype(kv_cache["v"].dtype), idx, axis=1)
     window = cfg.local_window if kind == "local" else None
     out = ops.decode_attention(q, k_cache, v_cache, cache_pos, pos_b,
                                window=window, softcap=cfg.logit_softcap)

@@ -106,7 +106,7 @@ class DLRMJob:
         self.step_fn = None
         self.global_step = 0
         self.generation = 0          # bumped on every recovery; stale
-        self._lock = threading.Lock()  # attempts see it and abandon
+        self._lock = threading.RLock()  # attempts see it and abandon
         self._cancel: Optional[threading.Event] = None
         self.losses: Dict[int, float] = {}
         self.degrade_level = 0
@@ -135,14 +135,18 @@ class DLRMJob:
         if resume and self.ckpt.latest_step() is not None:
             try:
                 return self.restore()
-            except FileNotFoundError:
-                pass                 # every blob corrupt: fall through to fresh
-        self.state = trainer_mod.make_dlrm_train_state(
-            self.cfg, self.opt, jax.random.PRNGKey(self.init_seed),
-            layout=self.layout)
-        self.global_step = 0
-        self._compile()
-        self.save()                  # step-0 blob: recovery never lacks a base
+            except FileNotFoundError as e:
+                # every blob corrupt: fall through to fresh init, but leave a
+                # trace in the checkpoint event log — a silent fresh start
+                # after data loss is indistinguishable from a clean boot
+                self.ckpt.note("restore_failed_fresh_start", error=str(e))
+        with self._lock:             # a stale attempt may still be running
+            self.state = trainer_mod.make_dlrm_train_state(
+                self.cfg, self.opt, jax.random.PRNGKey(self.init_seed),
+                layout=self.layout)
+            self.global_step = 0
+            self._compile()
+            self.save()              # step-0 blob: recovery never lacks a base
         return 0
 
     def _raw_batch(self, gstep: int) -> Dict[str, jnp.ndarray]:

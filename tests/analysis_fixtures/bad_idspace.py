@@ -1,0 +1,22 @@
+"""id-space fixture: every block below must trip the rule (positives)."""
+
+
+def assign_across_spaces(flat_ids):
+    padded_ids = flat_ids            # padded name <- flat value, no translator
+    return padded_ids
+
+
+def mix_in_arithmetic(flat_ids, padded_ids):
+    return flat_ids + padded_ids     # direct cross-space arithmetic
+
+
+def compare_spaces(raw_ids, flat_ids):
+    return raw_ids == flat_ids       # cross-space comparison
+
+
+def double_translate(padded_ids, layout):
+    return translate_rows(padded_ids, layout)  # translator fed its own output
+
+
+def translate_rows(rows, layout):
+    return rows

@@ -1,0 +1,16 @@
+"""pallas-dma fixture: DMA started and never awaited (positive)."""
+from jax.experimental.pallas import tpu as pltpu
+
+
+def leaky_fill(hbm_ref, vmem_ref, sem):
+    pltpu.make_async_copy(hbm_ref, vmem_ref, sem).start()
+    # no .wait() on `sem` anywhere in this module: the consumer races the copy
+
+
+def paired_elsewhere(hbm_ref, vmem_ref, other_sem):
+    cp = pltpu.make_async_copy(hbm_ref, vmem_ref, other_sem)
+    cp.start()
+
+
+def drain_other(hbm_ref, vmem_ref, unrelated_sem):
+    pltpu.make_async_copy(hbm_ref, vmem_ref, unrelated_sem).wait()

@@ -1,0 +1,24 @@
+"""pallas-vmem fixture: a kernel whose static footprint blows the cap.
+
+(2048, 2048) f32 blocks are 16 MiB each; double-buffered in+out blocks plus
+a 32 MiB f32 scratch put the upper bound far over any per-core VMEM.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, scratch):
+    o_ref[...] = x_ref[...]
+
+
+def oversized_blocks(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((2048, 2048), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2048, 2048), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((2048, 4096), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,41 @@
+"""jax-purity fixture: impurities inside traced code (positives)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_trace_log = []
+
+
+@jax.jit
+def noisy_step(x):
+    print("step", x)                 # host print freezes at trace time
+    return x + 1
+
+
+@jax.jit
+def frozen_noise(x):
+    return x + np.random.rand()      # host RNG drawn once, at trace time
+
+
+@jax.jit
+def records_traces(x):
+    _trace_log.append(1)             # closed-over mutation: once per trace
+    return x * 2
+
+
+@jax.jit
+def branches_on_tracer(x):
+    y = jnp.sum(x)
+    if y > 0:                        # TracerBoolConversionError at runtime
+        return x
+    return -x
+
+
+def helper_called_from_jit(x):
+    import time
+    return x * time.time()           # trace-time wall clock
+
+
+@jax.jit
+def calls_helper(x):
+    return helper_called_from_jit(x)

@@ -1,0 +1,23 @@
+"""silent-except fixture: bare and swallowed exception handlers (positives)."""
+
+
+def bare_handler(path):
+    try:
+        return open(path).read()
+    except:                          # noqa: E722  (the point of the fixture)
+        return None
+
+
+def swallowed(path):
+    try:
+        return open(path).read()
+    except OSError:
+        pass
+    return None
+
+
+def swallowed_ellipsis(fn):
+    try:
+        fn()
+    except (ValueError, KeyError):
+        ...

@@ -1,0 +1,35 @@
+"""thread-safety fixture: guarded state written bare (positives)."""
+import threading
+
+
+class LeakyCounter:
+    """`count` is lock-guarded in bump() but written bare in reset()."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def reset(self):
+        self.count = 0               # bare write to a guarded attribute
+
+
+class LocklessWorkerState:
+    """Writes the same attribute from a spawned thread and the caller."""
+
+    def __init__(self):
+        self.status = "idle"
+        self._thread = None
+
+    def launch(self):
+        self._thread = threading.Thread(target=self._run)
+        self._thread.start()
+
+    def _run(self):
+        self.status = "running"      # spawned-thread write, no lock
+
+    def cancel(self):
+        self.status = "cancelled"    # main-thread write to the same attr

@@ -1,0 +1,20 @@
+"""unseeded-random fixture: global/unseeded RNG state (positives)."""
+import random
+
+import numpy as np
+
+
+def legacy_numpy_draw(n):
+    return np.random.rand(n)         # legacy global-state RNG
+
+
+def unseeded_generator():
+    return np.random.default_rng()   # no seed: unreproducible
+
+
+def stdlib_global_draw():
+    return random.random()           # stdlib global RNG
+
+
+def unseeded_instance():
+    return random.Random()           # no seed: unreproducible

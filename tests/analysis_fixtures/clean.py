@@ -1,0 +1,87 @@
+"""Near-miss negatives: everything here must pass every rule.
+
+Each block sits just on the legal side of a rule boundary, so a rule that
+over-triggers fails the negative half of the fixture tests.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -- id-space: translator use, supertype flow, neutral names ---------------
+def translate_rows(rows, layout):        # sanctioned translator (exempt body)
+    return rows + layout.base
+
+
+def legal_translation(flat_ids, layout):
+    padded_ids = translate_rows(flat_ids, layout)   # through the translator
+    return padded_ids
+
+
+def encoded_supertype(flat_ids, padded_ids, pick_padded):
+    # flat and padded are both valid cold entries of an encoded stream
+    encoded_ids = padded_ids if pick_padded else flat_ids
+    return encoded_ids
+
+
+def neutral_names(flat_ids, layout):
+    # a neutral name may hold either space; geometry attrs carry no space
+    idx = flat_ids if layout is None else translate_rows(flat_ids, layout)
+    return idx, (None if layout is None else layout.padded_rows)
+
+
+# -- jax-purity: static branches, local mutation, outside-trace effects ----
+@jax.jit
+def pure_step(x, scale=None):
+    if scale is not None:                # `is None` is static under tracing
+        x = x * scale
+    if x.ndim == 2:                      # shape attrs are static
+        x = x[None]
+    acc = []
+    acc.append(jnp.sum(x))               # local container: rebuilt per trace
+    return acc[0]
+
+
+def host_logging(x):
+    print("outside any traced region:", x)   # not reachable from jit
+    return np.asarray(x)
+
+
+# -- unseeded-random: seeded generators are the contract -------------------
+def seeded_draw(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=n)
+
+
+def seeded_stdlib(seed):
+    import random
+    return random.Random(seed).random()
+
+
+# -- thread-safety: consistently guarded + effectively-locked helper -------
+class GuardedCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0                   # __init__ is single-threaded
+
+    def bump(self):
+        with self._lock:
+            self._advance()
+
+    def _advance(self):                  # only ever called under the lock
+        self.count += 1
+
+    def snapshot(self):
+        with self._lock:
+            return self.count
+
+
+# -- silent-except: typed handler with real handling -----------------------
+def tolerant_read(path, log):
+    try:
+        return open(path).read()
+    except OSError as e:
+        log.append(str(e))               # failure leaves a trace
+        return None

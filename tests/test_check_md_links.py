@@ -1,0 +1,157 @@
+"""Unit tests for scripts/check_md_links.py (link resolution + orphan BFS).
+
+The docs CI job trusts this checker; these tests pin its semantics on
+synthetic trees: relative-link resolution, fence/inline-code exclusion,
+anchor handling, edge recording, and README-rooted reachability.
+"""
+import importlib.util
+import os
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                      "scripts", "check_md_links.py")
+_spec = importlib.util.spec_from_file_location("check_md_links", SCRIPT)
+cml = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cml)
+
+
+def _write(root, rel, text):
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(text)
+    return path
+
+
+# ------------------------------------------------------------- check_file
+def test_broken_relative_link_reported(tmp_path):
+    root = str(tmp_path)
+    page = _write(root, "README.md", "intro\n[gone](docs/missing.md)\n")
+    broken = list(cml.check_file(page, root))
+    assert broken == [(2, "docs/missing.md")]
+
+
+def test_resolving_link_and_edge_recording(tmp_path):
+    root = str(tmp_path)
+    _write(root, "docs/API.md", "api\n")
+    page = _write(root, "README.md", "[api](docs/API.md)\n")
+    edges = {}
+    assert list(cml.check_file(page, root, edges)) == []
+    key = os.path.normpath(page)
+    assert edges[key] == {os.path.normpath(os.path.join(root, "docs/API.md"))}
+
+
+def test_remote_and_pure_anchor_links_skipped(tmp_path):
+    root = str(tmp_path)
+    page = _write(root, "README.md",
+                  "[a](https://example.com/x)\n"
+                  "[b](http://example.com)\n"
+                  "[c](mailto:x@example.com)\n"
+                  "[d](#local-section)\n")
+    assert list(cml.check_file(page, root)) == []
+
+
+def test_anchor_suffix_stripped_before_resolution(tmp_path):
+    root = str(tmp_path)
+    _write(root, "docs/API.md", "# Section\n")
+    page = _write(root, "README.md",
+                  "[ok](docs/API.md#section)\n"
+                  "[bad](docs/nope.md#section)\n")
+    assert list(cml.check_file(page, root)) == [(2, "docs/nope.md#section")]
+
+
+def test_code_fences_and_inline_code_ignored(tmp_path):
+    root = str(tmp_path)
+    page = _write(root, "README.md",
+                  "```\n[fenced](nowhere.md)\n```\n"
+                  "use `[inline](also-nowhere.md)` for links\n"
+                  "[real](truly-nowhere.md)\n")
+    assert list(cml.check_file(page, root)) == [(5, "truly-nowhere.md")]
+
+
+def test_directory_target_resolves(tmp_path):
+    root = str(tmp_path)
+    os.makedirs(os.path.join(root, "src"))
+    page = _write(root, "README.md", "[src tree](src)\n")
+    assert list(cml.check_file(page, root)) == []
+
+
+def test_relative_link_from_nested_page(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md", "root\n")
+    page = _write(root, "docs/DEEP.md", "[up](../README.md)\n[peer](GONE.md)\n")
+    assert list(cml.check_file(page, root)) == [(2, "GONE.md")]
+
+
+# ----------------------------------------------------------- iter_md_files
+def test_iter_md_files_skips_hidden_and_cache_dirs(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md", "x\n")
+    _write(root, "docs/A.md", "x\n")
+    _write(root, ".git/HEAD.md", "x\n")
+    _write(root, "__pycache__/junk.md", "x\n")
+    found = {os.path.relpath(p, root) for p in cml.iter_md_files(root)}
+    assert found == {"README.md", os.path.join("docs", "A.md")}
+
+
+# ------------------------------------------------------------ find_orphans
+def _build_graph(root):
+    md_files = list(cml.iter_md_files(root))
+    edges = {}
+    broken = []
+    for path in md_files:
+        broken += [(path, ln, t) for ln, t in cml.check_file(path, root, edges)]
+    return md_files, edges, broken
+
+
+def test_orphan_detected_and_transitive_reachability(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md", "[a](docs/A.md)\n")
+    _write(root, "docs/A.md", "[b](B.md)\n")
+    _write(root, "docs/B.md", "leaf, reachable via A\n")
+    _write(root, "docs/ORPHAN.md", "nobody links here\n")
+    md_files, edges, broken = _build_graph(root)
+    assert broken == []
+    orphans = cml.find_orphans(md_files, edges, root)
+    assert orphans == [os.path.join("docs", "ORPHAN.md")]
+
+
+def test_no_orphans_when_everything_linked(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md", "[a](docs/A.md)\n")
+    _write(root, "docs/A.md", "fin\n")
+    md_files, edges, _ = _build_graph(root)
+    assert cml.find_orphans(md_files, edges, root) == []
+
+
+def test_non_docs_pages_never_count_as_orphans(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md", "no links\n")
+    _write(root, "CHANGES.md", "unlinked, but not under docs/\n")
+    md_files, edges, _ = _build_graph(root)
+    assert cml.find_orphans(md_files, edges, root) == []
+
+
+def test_cycles_terminate(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md", "[a](docs/A.md)\n")
+    _write(root, "docs/A.md", "[b](B.md)\n")
+    _write(root, "docs/B.md", "[a again](A.md)\n")
+    md_files, edges, _ = _build_graph(root)
+    assert cml.find_orphans(md_files, edges, root) == []
+
+
+# ------------------------------------------------------------------- main()
+def test_main_ok_and_failure_exit_codes(tmp_path, capsys, monkeypatch):
+    root = str(tmp_path)
+    _write(root, "README.md", "[a](docs/A.md)\n")
+    _write(root, "docs/A.md", "fin\n")
+    monkeypatch.setattr(sys, "argv", ["check_md_links.py", root])
+    assert cml.main() == 0
+    assert "ok:" in capsys.readouterr().out
+
+    _write(root, "docs/ORPHAN.md", "unlinked\n")
+    _write(root, "docs/A.md", "[gone](GONE.md)\n")
+    assert cml.main() == 1
+    out = capsys.readouterr().out
+    assert "BROKEN LINKS" in out and "ORPHANED DOCS PAGES" in out
