@@ -150,7 +150,7 @@ def run() -> List[Row]:
     import jax.numpy as jnp
 
     from repro.kernels.fused_embedding import fused_embedding_bag
-    from repro.sharding.policy import padded_layout_for_ranges
+    from repro.sharding.policy import EmbeddingPlan, padded_layout_for_ranges
 
     balanced = svc.ps_ranges(n_ps)
     layout = padded_layout_for_ranges(balanced)
@@ -178,18 +178,18 @@ def run() -> List[Row]:
 
     batch = criteo_batch(cfg, 11, np.arange(0, 256))
     idx = jnp.asarray(batch["sparse"])
-    kw = dict(offsets=cfg.table_offsets, combiner="sum")
-    out_flat = fused_embedding_bag(pool, idx, **kw)
-    out_pad = fused_embedding_bag(ppool.reshape(-1, D), idx, layout=layout,
-                                  **kw)
+    flat_plan = EmbeddingPlan(offsets=cfg.table_offsets, combiner="sum")
+    pad_plan = flat_plan.with_replan(None, layout)
+    out_flat = fused_embedding_bag(pool, idx, plan=flat_plan)
+    out_pad = fused_embedding_bag(ppool.reshape(-1, D), idx, plan=pad_plan)
     rows.append(("padded_fwd_bitexact_err",
                  float(jnp.abs(out_pad - out_flat).max()),
                  "padded forward vs flat XLA reference (0 = bit-exact)"))
     import jax as _jax
     g_flat = _jax.grad(lambda p: jnp.sum(
-        fused_embedding_bag(p, idx, **kw) * 1.3))(pool)
+        fused_embedding_bag(p, idx, plan=flat_plan) * 1.3))(pool)
     g_pad = _jax.grad(lambda p3: jnp.sum(fused_embedding_bag(
-        p3.reshape(-1, D), idx, layout=layout, **kw) * 1.3))(ppool)
+        p3.reshape(-1, D), idx, plan=pad_plan) * 1.3))(ppool)
     rows.append(("padded_bwd_bitexact_err",
                  float(jnp.abs(layout.unpad_rows(g_pad) - g_flat).max()),
                  "padded backward vs flat XLA reference (0 = bit-exact)"))

@@ -27,7 +27,7 @@ from repro.data.synthetic import RowFreqCounter, zipf_indices
 from repro.kernels import ref
 from repro.kernels.fused_embedding import fused_embedding_bag, table_offsets
 from repro.models.attention import chunked_attention
-from repro.sharding.policy import pack_hot_ranges
+from repro.sharding.policy import EmbeddingPlan, pack_hot_ranges
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "") == "1"
 
@@ -69,8 +69,10 @@ def run() -> List[Row]:
             combiner="sum") for t in range(T)]
         return jnp.stack(outs, axis=1)
 
+    fwd_plan = EmbeddingPlan(offsets=offs, combiner="sum")
+
     def fused_fwd(p, i):
-        return fused_embedding_bag(p, i, offsets=offs, combiner="sum")
+        return fused_embedding_bag(p, i, plan=fwd_plan)
 
     f_loop = jax.jit(loop_fwd)
     f_fused = jax.jit(fused_fwd)
@@ -89,19 +91,22 @@ def run() -> List[Row]:
     rows.append(("embed_fwdbwd_fused_us", us_fused_bwd, note))
     rows.append(("embed_fwdbwd_fused_speedup",
                  us_loop_bwd / max(us_fused_bwd, 1e-9),
-                 "segment_sum VJP vs T scatter-adds"))
+                 "deduped-COO VJP vs T scatter-adds (sort-based dedupe "
+                 "keeps dense and sparse backward bit-identical)"))
 
     # Pallas interpret correctness of the fused kernel (small shapes: the
     # interpreter is slow, this is a numerics check, not a timing)
     sidx = midx[:32]
-    out_p = fused_embedding_bag(pool, sidx, offsets=offs, combiner="sum",
-                                method="interpret", block_b=8)
+    out_p = fused_embedding_bag(pool, sidx, method="interpret", plan=fwd_plan)
     err = float(jnp.abs(out_p - f_fused(pool, sidx)).max())
     rows.append(("fused_embedding_pallas_err", err,
                  "double-buffered interpret vs ref, B=32"))
 
     # --- skew-aware engine: zipfian stream, placement + hot-row cache -------
     rows.extend(_skew_rows())
+
+    # --- fused sparse backward + row-wise optimizer update ------------------
+    rows.extend(_fused_update_rows())
 
     # --- chunked attention (the dry-run lowering path) ----------------------
     B, S, Hh, Dh = (1, 256, 8, 64) if FAST else (1, 1024, 8, 64)
@@ -157,12 +162,14 @@ def _skew_rows() -> List[Row]:
     rows.append(("embed_cache_hit_rate_zipf", hit,
                  f"top-{budget} rows ({budget / (T * R_t):.2%} of pool)"))
 
+    base_plan = EmbeddingPlan(offsets=offs, combiner="sum")
+    cache_plan = base_plan.with_replan(plan, None)
+
     def fused(p, i):
-        return fused_embedding_bag(p, i, offsets=offs, combiner="sum")
+        return fused_embedding_bag(p, i, plan=base_plan)
 
     def engine(p, i):
-        return fused_embedding_bag(p, i, offsets=offs, combiner="sum",
-                                   table_hot=plan)
+        return fused_embedding_bag(p, i, plan=cache_plan)
 
     f_fused = jax.jit(fused)
     f_engine = jax.jit(engine)
@@ -192,14 +199,103 @@ def _skew_rows() -> List[Row]:
     # interpret-mode numerics: the double-buffered cache path must BIT-match
     # the XLA fallback (small shapes; the interpreter is slow)
     sm = 16
+    sm_plan = EmbeddingPlan(offsets=table_offsets((64,) * 8), combiner="sum")
     out_c = fused_embedding_bag(pool[:8 * 64], ranks[:sm, :8, :].clip(0, 63),
-                                offsets=table_offsets((64,) * 8),
-                                combiner="sum", method="interpret", block_b=8,
-                                table_hot=(16,) * 8)
+                                method="interpret",
+                                plan=sm_plan.with_replan((16,) * 8, None))
     out_x = fused_embedding_bag(pool[:8 * 64], ranks[:sm, :8, :].clip(0, 63),
-                                offsets=table_offsets((64,) * 8),
-                                combiner="sum", method="xla")
+                                method="xla", plan=sm_plan)
     exact = float(np.asarray(jnp.abs(out_c - out_x)).max())
     rows.append(("fused_cache_interpret_err", exact,
                  "hot-row cache interpret vs XLA (0 = bit-exact)"))
+    return rows
+
+
+def _fused_update_rows() -> List[Row]:
+    """Fused sparse backward + row-wise adagrad vs the dense reference.
+
+    The dense baseline is what the train step did before the sparse-update
+    seam: materialize the full (R, D) pool cotangent through the embedding
+    VJP, then run the optimizer over EVERY row (touched or not). The fused
+    path dedupes the batch's rows into COO row grads and updates exactly
+    those — O(touched) instead of O(R) — the acceptance bar is >= 2x on the
+    full 1M-row/table zipfian workload.
+    """
+    rows: List[Row] = []
+    from repro.kernels import ops as kernel_ops
+
+    if FAST:
+        T, H, B, D, R_t = 8, 4, 256, 16, 20_000
+    else:
+        T, H, B, D, R_t = 26, 4, 512, 16, 1_000_000
+    alpha = 1.05
+    plan = EmbeddingPlan(offsets=table_offsets((R_t,) * T), combiner="sum")
+    note = f"B={B} T={T} hot={H} D={D} R={R_t}/table alpha={alpha}"
+    lr, eps = 0.05, 1e-10
+
+    rng = np.random.default_rng(1)
+    pool = jnp.asarray(rng.standard_normal((T * R_t, D), np.float32))
+    acc = jnp.asarray(np.abs(rng.standard_normal((T * R_t, D), np.float32)))
+    ranks = np.stack([zipf_indices(rng, R_t, (B, H), alpha)
+                      for _ in range(T)], axis=1)
+    idx = jnp.asarray(ranks.astype(np.int32))
+    ct = jnp.asarray(rng.standard_normal((B, T, D), np.float32))
+
+    def dense_step(p, a, i, g):
+        _, vjp = jax.vjp(lambda q: fused_embedding_bag(q, i, plan=plan), p)
+        (dp,) = vjp(g)                               # dense (R, D) cotangent
+        new_a = a + jnp.square(dp)                   # full-pool adagrad
+        return p - lr * dp / (jnp.sqrt(new_a) + eps), new_a
+
+    def sparse_step(p, a, i, g):
+        r, v, _ = kernel_ops.sparse_row_grads(p, i, g, plan=plan)
+        return kernel_ops.fused_row_update(p, r, v, a, kind="adagrad",
+                                           impl="xla", lr=lr, eps=eps)
+
+    # pools are donated, as in the real train step (state threads through the
+    # jit): without donation both paths pay two full (R, D) copies per call,
+    # which buries the O(touched)-vs-O(R) difference under O(R) memcpy
+    def timed_threaded(step):
+        f = jax.jit(step, donate_argnums=(0, 1))
+        p, a = jnp.array(pool), jnp.array(acc)       # fresh donatable copies
+        p, a = f(p, a, idx, ct)                      # warmup / compile
+        jax.block_until_ready((p, a))
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(3):
+                p, a = f(p, a, idx, ct)
+            jax.block_until_ready((p, a))
+            best = min(best, (time.perf_counter() - t0) / 3 * 1e6)   # us
+        return best
+
+    us_dense = timed_threaded(dense_step)
+    us_sparse = timed_threaded(sparse_step)
+    rows.append(("fused_bwd_opt_dense_us", us_dense,
+                 f"dense VJP + full-pool adagrad; {note}"))
+    rows.append(("fused_bwd_opt_sparse_us", us_sparse,
+                 "sparse_row_grads + fused row update (touched rows only)"))
+    rows.append(("fused_bwd_opt_speedup", us_dense / max(us_sparse, 1e-9),
+                 "fused backward+update vs dense reference (bar: >= 2x)"))
+
+    # numerics: the Pallas row-update kernel (interpret) must BIT-match the
+    # XLA fallback AND the dense full-pool reference on the touched rows —
+    # small shapes, jitted on both sides so FMA contraction is identical
+    sp, sa = pool[:8 * 64], acc[:8 * 64]
+    s_plan = EmbeddingPlan(offsets=table_offsets((64,) * 8), combiner="sum")
+    si = jnp.asarray(ranks[:16, :8, :].clip(0, 63).astype(np.int32))
+    sg = ct[:16, :8, :]
+
+    def small_step(impl):
+        def step(p, a, i, g):
+            r, v, _ = kernel_ops.sparse_row_grads(p, i, g, plan=s_plan)
+            return kernel_ops.fused_row_update(p, r, v, a, kind="adagrad",
+                                               impl=impl, lr=lr, eps=eps)
+        return jax.jit(step)
+
+    px, ax = small_step("xla")(sp, sa, si, sg)
+    pi, ai = small_step("interpret")(sp, sa, si, sg)
+    err = max(float(jnp.abs(px - pi).max()), float(jnp.abs(ax - ai).max()))
+    rows.append(("fused_bwd_opt_err", err,
+                 "row-update interpret vs XLA (0 = bit-exact)"))
     return rows

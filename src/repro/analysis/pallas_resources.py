@@ -17,6 +17,24 @@ VMEM blocks and are excluded.
 expression* somewhere in the module (start and wait legitimately live in
 different helpers, e.g. a fill/drain pair). A started-but-never-awaited
 copy races the buffer consumer; the interpret path hides it.
+
+Both rules also understand the in-place row-update idiom
+(``input_output_aliases`` + ``memory_space=ANY`` pools + a DMA-semaphore
+array scratch):
+
+* pallas-dma bounds-checks semaphore slots: when the kernel function is
+  statically resolvable (a plain ``def``, possibly behind
+  ``functools.partial``) and a ``scratch_shapes`` entry declares
+  ``pltpu.SemaphoreType.DMA((k,))``, any constant ``sem.at[i]`` with
+  ``i >= k`` in that kernel is flagged — an out-of-range slot aliases a
+  neighbouring semaphore and deadlocks or silently corrupts on real TPUs
+  while interpret mode shrugs.
+* pallas-vmem validates ``input_output_aliases`` dict literals: operand
+  indices must be in range of the literal ``in_specs``/``out_specs``
+  lists, and an aliased input/output pair must live in the *same* memory
+  space (aliasing names one buffer; a VMEM-blocked input aliased onto an
+  ``ANY`` output — or vice versa — is a miscounted operand index until it
+  explodes at lowering time).
 """
 from __future__ import annotations
 
@@ -128,6 +146,62 @@ class VmemBudgetRule(Rule):
                     f"kernel VMEM upper bound {total / 2**20:.1f} MiB exceeds "
                     f"the {cap / 2**20:.1f} MiB cap ({detail}); shrink block "
                     "shapes or raise --vmem-cap-bytes with a justification")
+            yield from self._check_aliases(ctx, node)
+
+    def _check_aliases(self, ctx: ModuleContext, call: ast.Call
+                       ) -> Iterator[Finding]:
+        """Validate an ``input_output_aliases`` dict literal statically."""
+        aliases = _kw(call, "input_output_aliases")
+        if not isinstance(aliases, ast.Dict):
+            return
+        in_specs = _as_elements(_kw(call, "in_specs"))
+        out_specs = _as_elements(_kw(call, "out_specs"))
+        n_out = len(out_specs) or len(_as_elements(_kw(call, "out_shape")))
+        for k, v in zip(aliases.keys, aliases.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, int)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, int)
+                    and k.value >= 0 and v.value >= 0):
+                continue  # computed alias indices: not statically decidable
+            if in_specs and k.value >= len(in_specs):
+                yield self.finding(
+                    ctx, k,
+                    f"input_output_aliases names input {k.value} but only "
+                    f"{len(in_specs)} in_specs exist; operand indices count "
+                    "every input (SMEM blocks included)")
+                continue
+            if n_out and v.value >= n_out:
+                yield self.finding(
+                    ctx, v,
+                    f"input_output_aliases names output {v.value} but only "
+                    f"{n_out} outputs exist")
+                continue
+            if in_specs and out_specs:
+                mem_in = self._memspace(ctx, in_specs[k.value])
+                mem_out = self._memspace(ctx, out_specs[v.value])
+                if mem_in and mem_out and mem_in != mem_out:
+                    yield self.finding(
+                        ctx, k,
+                        f"aliased pair input {k.value} ({mem_in}) -> output "
+                        f"{v.value} ({mem_out}) straddles memory spaces; an "
+                        "alias names ONE buffer, so both specs must agree "
+                        "(likely a miscounted operand index)")
+
+    @staticmethod
+    def _memspace(ctx: ModuleContext, el: ast.AST) -> Optional[str]:
+        """The declared memory space of a BlockSpec element, if decidable."""
+        if isinstance(el, ast.Name):
+            el = VmemBudgetRule._resolve_local(ctx, el.id)
+        if not isinstance(el, ast.Call):
+            return None
+        chain = _attr_chain(el.func)
+        if not chain or chain[-1] != "BlockSpec":
+            return None
+        mem = _kw(el, "memory_space")
+        if mem is None:
+            return "VMEM"  # blocked specs default to the VMEM pipeline
+        mchain = _attr_chain(mem)
+        return mchain[-1] if mchain else None
 
     def _block_specs(self, ctx: ModuleContext, call: ast.Call
                      ) -> Iterator[Tuple[str, ast.Call]]:
@@ -242,6 +316,85 @@ class DmaPairingRule(Rule):
                     f"DMA started on semaphore `{sem}` is never awaited in "
                     "this module; add the matching .wait() (unwaited copies "
                     "race their consumer)")
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if chain and chain[-1] == "pallas_call":
+                    yield from self._check_sem_slots(ctx, node)
+
+    def _check_sem_slots(self, ctx: ModuleContext, call: ast.Call
+                         ) -> Iterator[Finding]:
+        """Constant ``sem.at[i]`` must fit the declared DMA((k,)) shape."""
+        scratch = _as_elements(_kw(call, "scratch_shapes"))
+        if not scratch:
+            return
+        fn = self._kernel_def(ctx, call)
+        if fn is None or fn.args.vararg is not None:
+            return  # kernel not statically resolvable / *refs-style packing
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        if len(params) < len(scratch):
+            return
+        caps: Dict[str, int] = {}
+        for name, decl in zip(params[-len(scratch):], scratch):
+            cap = self._dma_capacity(decl)
+            if cap is not None:
+                caps[name] = cap
+        for sub in ast.walk(fn):
+            if not (isinstance(sub, ast.Subscript)
+                    and isinstance(sub.value, ast.Attribute)
+                    and sub.value.attr == "at"
+                    and isinstance(sub.value.value, ast.Name)
+                    and sub.value.value.id in caps):
+                continue
+            idx = sub.slice
+            if isinstance(idx, ast.Constant) and isinstance(idx.value, int):
+                cap = caps[sub.value.value.id]
+                if not -cap <= idx.value < cap:
+                    yield self.finding(
+                        ctx, sub,
+                        f"`{ast.unparse(sub)}` indexes past the declared "
+                        f"SemaphoreType.DMA(({cap},)) capacity in kernel "
+                        f"`{fn.name}`; an out-of-range slot aliases a "
+                        "neighbouring semaphore (interpret mode hides it)")
+
+    @staticmethod
+    def _kernel_def(ctx: ModuleContext, call: ast.Call
+                    ) -> Optional[ast.FunctionDef]:
+        """Resolve pallas_call's kernel argument to its FunctionDef."""
+        node: Optional[ast.AST] = call.args[0] if call.args else None
+        for _ in range(4):   # Name -> local assign -> partial(...) -> Name
+            if isinstance(node, ast.Name):
+                for cand in ast.walk(ctx.tree):
+                    if isinstance(cand, ast.FunctionDef) \
+                            and cand.name == node.id:
+                        return cand
+                node = VmemBudgetRule._resolve_local(ctx, node.id)
+            elif isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if chain and chain[-1] == "partial" and node.args:
+                    node = node.args[0]
+                else:
+                    return None
+            else:
+                return None
+        return None
+
+    @staticmethod
+    def _dma_capacity(decl: ast.AST) -> Optional[int]:
+        """The k of a literal ``pltpu.SemaphoreType.DMA((k,))`` scratch."""
+        if not isinstance(decl, ast.Call):
+            return None
+        chain = _attr_chain(decl.func)
+        if not chain or chain[-1] != "DMA" or "SemaphoreType" not in chain:
+            return None
+        if len(decl.args) != 1 \
+                or not isinstance(decl.args[0], (ast.Tuple, ast.List)) \
+                or len(decl.args[0].elts) != 1:
+            return None
+        dim = decl.args[0].elts[0]
+        if isinstance(dim, ast.Constant) and isinstance(dim.value, int):
+            return dim.value
+        return None
 
     @staticmethod
     def _sem_expr(call: ast.Call) -> str:

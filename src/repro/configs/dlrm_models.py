@@ -68,6 +68,21 @@ class DLRMConfig:
         return tuple(min(int(r), per + (1 if t < rem else 0))
                      for t, r in enumerate(self.table_rows))
 
+    def embedding_plan(self, *, table_hot=None, layout=None,
+                       sparse_update: bool = False, block_b: int = 8):
+        """The ``EmbeddingPlan`` this workload's fused embedding calls run
+        under: the config's ``table_offsets``/``pooling`` plus the job's
+        live knobs (measured cache plan, physical layout, fused sparse
+        update). ``table_hot=None`` defaults to ``cfg.table_hot``.
+        """
+        from repro.sharding.policy import EmbeddingPlan
+        return EmbeddingPlan(
+            offsets=self.table_offsets, combiner=self.pooling,
+            block_b=block_b,
+            table_hot=self.table_hot if table_hot is None else
+            tuple(int(k) for k in table_hot),
+            layout=layout, sparse_update=sparse_update)
+
     def param_count(self) -> int:
         emb = self.total_embedding_rows * self.embed_dim
         d_in = self.n_dense + self.n_tables * self.embed_dim

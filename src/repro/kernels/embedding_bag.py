@@ -1,113 +1,48 @@
-"""Pallas TPU kernel: single-table embedding gather + segment pooling.
+"""DEPRECATED: legacy single-table embedding-bag entry point.
 
-The paper's #1 hot spot: embedding-table lookups consume 30–48 % of DLRM
-iteration time (§1, Fig 1a). On the CPU/PS architecture this is network+DRAM
-traffic; on TPU we adapt it as a *scalar-prefetch gather*: the index tensor is
-prefetched to SMEM, the grid walks (batch, lookup) pairs, and each step DMAs
-exactly one embedding row HBM→VMEM via the BlockSpec index_map — no
-materialized (B, n, D) gather tensor ever exists. Pooling (sum/mean/max)
-accumulates in the revisited output block.
+The one-table-per-call Pallas kernel that used to live here (scalar-prefetch
+gather, one grid step per (batch, lookup) pair) has been folded into the
+multi-table fused engine: ``ops.embedding_bag`` wraps
+``repro.kernels.fused_embedding`` with ``T=1``, so every caller shares one
+combiner/weights contract (weights apply before sum/mean/max) and one
+sparse-gradient custom VJP instead of a drifting second implementation.
 
-Weighted bags multiply each row by a per-(b, lookup) scalar prefetched to
-SMEM *before* the combiner is applied, so weighted mean/max agree with
-``ref.embedding_bag_ref`` (weights used to be silently ignored for any
-combiner but "sum").
-
-This is the legacy one-table-per-call kernel; the multi-table hot path lives
-in ``repro.kernels.fused_embedding`` (one launch for all tables + sparse
-VJP). ``ops.embedding_bag`` routes through the fused engine.
+This module remains as a thin re-export so external imports keep working:
+``embedding_bag(table, indices, ..., interpret=True)`` maps onto
+``ops.embedding_bag(..., impl="interpret")`` (the fused Pallas kernel in
+interpret mode). It warns ``DeprecationWarning`` once per process — new code
+should call ``repro.kernels.ops.embedding_bag`` with an ``EmbeddingPlan``.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF
+from repro.kernels.common import NEG_INF  # noqa: F401  (re-export, see tests)
 
-
-def _bag_kernel(idx_ref, table_row_ref, out_ref, *, n: int, combiner: str):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        if combiner == "max":
-            out_ref[...] = jnp.full_like(out_ref, NEG_INF)
-        else:
-            out_ref[...] = jnp.zeros_like(out_ref)
-
-    row = table_row_ref[...].astype(jnp.float32)
-    if combiner == "max":
-        out_ref[...] = jnp.maximum(out_ref[...], row.astype(out_ref.dtype))
-    else:
-        out_ref[...] += row.astype(out_ref.dtype)
-
-    if combiner == "mean":
-        @pl.when(j == n - 1)
-        def _fin():
-            out_ref[...] = out_ref[...] / n
-
-
-def _bag_kernel_weighted(idx_ref, w_ref, table_row_ref, out_ref, *, n: int,
-                         combiner: str):
-    b = pl.program_id(0)
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        if combiner == "max":
-            out_ref[...] = jnp.full_like(out_ref, NEG_INF)
-        else:
-            out_ref[...] = jnp.zeros_like(out_ref)
-
-    row = table_row_ref[...].astype(jnp.float32) * w_ref[b, j]
-    if combiner == "max":
-        out_ref[...] = jnp.maximum(out_ref[...], row.astype(out_ref.dtype))
-    else:
-        out_ref[...] += row.astype(out_ref.dtype)
-
-    if combiner == "mean":
-        @pl.when(j == n - 1)
-        def _fin():
-            out_ref[...] = out_ref[...] / n
+_DEPRECATION_WARNED = False
 
 
 def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
                   weights: Optional[jnp.ndarray] = None, *,
                   combiner: str = "sum", interpret: bool = False) -> jnp.ndarray:
-    """table (R, D); indices (B, n) int32; weights (B, n)? -> (B, D)."""
-    assert combiner in ("sum", "mean", "max"), combiner
-    R, D = table.shape
-    B, n = indices.shape
-    indices = indices.astype(jnp.int32)
+    """table (R, D); indices (B, n) int32; weights (B, n)? -> (B, D).
 
-    if weights is not None:
-        kernel = functools.partial(_bag_kernel_weighted, n=n, combiner=combiner)
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,   # indices, weights
-            grid=(B, n),
-            in_specs=[pl.BlockSpec((1, D), lambda b, j, idx, w: (idx[b, j], 0))],
-            out_specs=pl.BlockSpec((1, D), lambda b, j, idx, w: (b, 0)),
-        )
-        args = (indices, weights.astype(jnp.float32), table)
-    else:
-        kernel = functools.partial(_bag_kernel, n=n, combiner=combiner)
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(B, n),
-            in_specs=[pl.BlockSpec((1, D), lambda b, j, idx: (idx[b, j], 0))],
-            out_specs=pl.BlockSpec((1, D), lambda b, j, idx: (b, 0)),
-        )
-        args = (indices, table)
-
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
-        interpret=interpret,
-    )(*args)
-    return out
+    Deprecated alias for ``ops.embedding_bag`` (the fused multi-table
+    engine with T=1); ``interpret=True`` selects the Pallas kernel in
+    interpret mode, otherwise the process-default impl applies.
+    """
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            "repro.kernels.embedding_bag is deprecated; use "
+            "repro.kernels.ops.embedding_bag (fused engine, plan=...)",
+            DeprecationWarning, stacklevel=2)
+    from repro.kernels import ops
+    from repro.sharding.policy import EmbeddingPlan
+    return ops.embedding_bag(table, indices, weights,
+                             plan=EmbeddingPlan(combiner=combiner),
+                             impl="interpret" if interpret else None)

@@ -376,7 +376,124 @@ def _xla_forward(pool, flat_idx, weights, *, B, T, H, combiner):
 
 
 # ---------------------------------------------------------------------------
-# custom VJP: forward dispatches impls, backward is one segment_sum
+# sparse-gradient aggregation: the dedupe+segment step both backward paths share
+# ---------------------------------------------------------------------------
+def dedupe_rows(store_idx: jnp.ndarray, g_rows: jnp.ndarray,
+                num_rows: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Deduplicate row cotangents: (N,) rows + (N, D) grads → COO row grads.
+
+    Duplicate store rows (the same id looked up twice in a batch — or twice
+    inside one bag) are segment-reduced into a single entry, accumulating in
+    a deterministic order (stable sort preserves the original order of equal
+    rows). Output keeps the static input length: entry ``j`` of the result
+    is the ``j``-th *distinct* row with its summed gradient; the tail is
+    padded with the sentinel row ``num_rows`` and zero values. The sentinel
+    is out of bounds on purpose — JAX scatter drops out-of-bounds updates,
+    so the tail is inert for both the dense scatter-add and the fused
+    row-wise optimizer update.
+
+    Args:
+      store_idx: (N,) int store rows (flat or padded space — whichever space
+                 the pool being updated lives in).
+      g_rows:    (N, D) per-lookup row cotangents.
+      num_rows:  static row count of the store (the sentinel value).
+
+    Returns ``(rows, vals)``: (N,) int rows (deduped + sentinel tail),
+    (N, D) summed values (zero tail).
+    """
+    n = store_idx.shape[0]
+    order = jnp.argsort(store_idx, stable=True)
+    sorted_rows = store_idx[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_rows[1:] != sorted_rows[:-1]])
+    seg = jnp.cumsum(first) - 1                    # dense segment id per entry
+    vals = jax.ops.segment_sum(g_rows[order], seg, num_segments=n)
+    rows = jnp.full((n,), num_rows, sorted_rows.dtype).at[seg].set(sorted_rows)
+    return rows, vals
+
+
+def _row_cotangents(pool, store_idx, w, g, *, combiner: str, B: int, T: int,
+                    H: int):
+    """Per-lookup row cotangents for one pooled bag output cotangent ``g``.
+
+    Args:
+      pool:      (R, D) store (only read for max ties and weighted ``dw``).
+      store_idx: (B*T*H,) store rows of every lookup.
+      w:         optional (B, T, H) f32 per-lookup weights.
+      g:         (B, T, D) f32 output cotangent.
+
+    Returns ``(g_rows, dw)``: (B, T, H, D) f32 cotangent per looked-up row,
+    and the (B, T, H) weight cotangent (None when unweighted).
+    """
+    D = pool.shape[1]
+    if combiner == "max":
+        rows = jnp.take(pool, store_idx, axis=0).reshape(B, T, H, D)
+        rows = rows.astype(jnp.float32)
+        v = rows if w is None else rows * w[..., None]
+        m = jnp.max(v, axis=2)                             # (B, T, D)
+        # jax.grad(jnp.max) splits the cotangent evenly among tied argmaxes;
+        # the normalized indicator reproduces that exactly (duplicate indices
+        # inside one bag are the common tie source).
+        tie = (v == m[:, :, None, :]).astype(jnp.float32)
+        tie = tie / jnp.sum(tie, axis=2, keepdims=True)
+        g_v = g[:, :, None, :] * tie                       # d loss / d v
+        dw = None if w is None else jnp.sum(g_v * rows, axis=-1)
+        g_rows = g_v if w is None else g_v * w[..., None]
+        return g_rows, dw
+    g_v = jnp.broadcast_to(g[:, :, None, :], (B, T, H, D))
+    if combiner == "mean":
+        g_v = g_v / H
+    if w is None:
+        return g_v, None
+    rows = jnp.take(pool, store_idx, axis=0).reshape(B, T, H, D)
+    dw = jnp.sum(g_v * rows.astype(jnp.float32), axis=-1)
+    return g_v * w[..., None], dw
+
+
+def sparse_row_grads(pool: jnp.ndarray, indices: jnp.ndarray, g: jnp.ndarray,
+                     weights: Optional[jnp.ndarray] = None, *, plan):
+    """Fused sparse backward: bag cotangents → deduped COO row gradients.
+
+    The sparse twin of the custom VJP's pool gradient: instead of
+    materializing the dense (R, D) scatter, it stops at the deduped
+    (rows, vals) pair — exactly what ``Optimizer.update_rows`` (the fused
+    row-wise optimizer update) consumes. Scattering ``vals`` at ``rows``
+    into zeros reproduces the dense gradient bit for bit (same dedupe, same
+    accumulation order).
+
+    Args:
+      pool:    (R, D) store (flat, or the flattened padded pool under
+               ``plan.layout``).
+      indices: (B, T, H) per-table-local (or global flat) lookup rows.
+      g:       (B, T, D) cotangent of the fused bag output.
+      weights: optional (B, T, H) per-lookup scalars.
+      plan:    the ``EmbeddingPlan`` the forward ran under (duck-typed:
+               ``offsets``, ``combiner``, ``layout`` are read).
+
+    Returns ``(rows, vals, dweights)``: (B*T*H,) deduped store rows with
+    sentinel tail, (B*T*H, D) f32 summed row grads, and the weights
+    cotangent (None when unweighted).
+    """
+    B, T, H = indices.shape
+    R = pool.shape[0]
+    idx = indices.astype(jnp.int32)
+    if plan.offsets is not None:
+        idx = idx + jnp.asarray(plan.offsets, jnp.int32)[None, :, None]
+    flat_idx = idx.reshape(-1)
+    store_idx = flat_idx if plan.layout is None else \
+        translate_rows(flat_idx, plan.layout)
+    w = None if weights is None else \
+        weights.astype(jnp.float32).reshape(B, T, H)
+    g_rows, dw = _row_cotangents(pool, store_idx, w, g.astype(jnp.float32),
+                                 combiner=plan.combiner, B=B, T=T, H=H)
+    rows, vals = dedupe_rows(store_idx, g_rows.reshape(B * T * H, -1), R)
+    dweights = None if dw is None else dw.reshape(weights.shape).astype(
+        weights.dtype)
+    return rows, vals, dweights
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: forward dispatches impls, backward is dedupe + one scatter-add
 # ---------------------------------------------------------------------------
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _fused(pool, flat_idx, weights, meta):
@@ -435,38 +552,17 @@ def _fused_bwd(meta, res, g):
     # the pool is unpadded, padded rows under a layout (whose padding slots
     # are never addressed, so they receive exactly zero)
     store_idx = flat_idx if layout is None else translate_rows(flat_idx, layout)
-    g = g.astype(jnp.float32)                              # (B, T, D)
     w = None if weights is None else weights.reshape(B, T, H)
+    g_rows, dw = _row_cotangents(pool, store_idx, w, g.astype(jnp.float32),
+                                 combiner=combiner, B=B, T=T, H=H)
 
-    if combiner == "max":
-        rows = jnp.take(pool, store_idx, axis=0).reshape(B, T, H, D)
-        rows = rows.astype(jnp.float32)
-        v = rows if w is None else rows * w[..., None]
-        m = jnp.max(v, axis=2)                             # (B, T, D)
-        # jax.grad(jnp.max) splits the cotangent evenly among tied argmaxes;
-        # the normalized indicator reproduces that exactly (duplicate indices
-        # inside one bag are the common tie source).
-        tie = (v == m[:, :, None, :]).astype(jnp.float32)
-        tie = tie / jnp.sum(tie, axis=2, keepdims=True)
-        g_v = g[:, :, None, :] * tie                       # d loss / d v
-        dw = None if w is None else jnp.sum(g_v * rows, axis=-1)
-        g_rows = g_v if w is None else g_v * w[..., None]
-    else:
-        g_v = jnp.broadcast_to(g[:, :, None, :], (B, T, H, D))
-        if combiner == "mean":
-            g_v = g_v / H
-        if w is None:
-            dw = None
-            g_rows = g_v
-        else:
-            rows = jnp.take(pool, store_idx, axis=0).reshape(B, T, H, D)
-            dw = jnp.sum(g_v * rows.astype(jnp.float32), axis=-1)
-            g_rows = g_v * w[..., None]
-
-    # Sparse-gradient aggregation: duplicate global rows are deduplicated and
-    # scatter-added in one fused segment reduction over the flat indices.
-    dpool = jax.ops.segment_sum(
-        g_rows.reshape(B * T * H, D), store_idx, num_segments=R)
+    # Sparse-gradient aggregation through the explicit dedupe+segment step
+    # shared with ``sparse_row_grads``: one scatter of the deduped values
+    # reproduces the old per-index segment_sum (and makes the dense path the
+    # bit-exact oracle for the fused row-wise update, which consumes the
+    # same (rows, vals) pair).
+    rows, vals = dedupe_rows(store_idx, g_rows.reshape(B * T * H, D), R)
+    dpool = jnp.zeros((R, D), jnp.float32).at[rows].add(vals)
     dweights = None if dw is None else dw.reshape(weights.shape).astype(
         weights.dtype)
     return dpool.astype(pool.dtype), None, dweights
@@ -484,7 +580,7 @@ def fused_embedding_bag(pool: jnp.ndarray, indices: jnp.ndarray,
                         combiner: str = "sum", method: str = "xla",
                         block_b: int = 8,
                         table_hot: Optional[Sequence[int]] = None,
-                        layout=None) -> jnp.ndarray:
+                        layout=None, plan=None) -> jnp.ndarray:
     """Pool per-table embedding bags for all tables in one fused call.
 
     Args:
@@ -514,10 +610,18 @@ def fused_embedding_bag(pool: jnp.ndarray, indices: jnp.ndarray,
                  jit-static (rides in the custom-VJP meta): changing the
                  physical layout recompiles, as a live re-plan requires.
                  Numerics are bit-identical to the flat layout.
+      plan:      optional ``repro.sharding.policy.EmbeddingPlan`` supplying
+                 ``offsets``/``combiner``/``block_b``/``table_hot``/``layout``
+                 in one hashable value (overrides the loose kwargs; the
+                 preferred form — see ``kernels/ops.py``).
 
-    Returns (B, T, D); gradients flow to ``pool`` (sparse scatter-add via
-    ``segment_sum``, into padded rows under ``layout``) and ``weights``.
+    Returns (B, T, D); gradients flow to ``pool`` (sparse scatter-add of
+    the deduped row cotangents, into padded rows under ``layout``) and
+    ``weights``.
     """
+    if plan is not None:
+        offsets, combiner, block_b = plan.offsets, plan.combiner, plan.block_b
+        table_hot, layout = plan.table_hot, plan.layout
     assert combiner in COMBINERS, combiner
     assert indices.ndim == 3, f"indices must be (B, T, H), got {indices.shape}"
     B, T, H = indices.shape

@@ -7,14 +7,50 @@ impl:
   "interpret" — Pallas kernels in interpret mode (CPU correctness testing).
 
 Set globally via ``set_default_impl`` or per-call with ``impl=``.
+
+Embedding calls are planned by a single ``repro.sharding.policy
+.EmbeddingPlan`` value (``plan=``): the frozen, hashable bundle of the
+static knobs (``offsets``/``combiner``/``block_b``/``table_hot``/
+``layout``/sparse-update flags) that used to accrete as loose kwargs. The
+loose kwargs survive as a deprecation shim that builds a plan and warns
+once per process.
 """
 from __future__ import annotations
 
 import os
+import warnings
 
 from repro.models import attention as _xla_attn
 
 _DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "xla")
+
+_LEGACY_KWARGS_WARNED = False
+
+
+def _shim_plan(offsets, combiner, block_b, table_hot, layout):
+    """Build an ``EmbeddingPlan`` from the deprecated loose kwargs.
+
+    Warns once per process — but only when a loose kwarg was actually
+    passed; a bare call (all defaults) silently gets the default plan.
+    """
+    global _LEGACY_KWARGS_WARNED
+    legacy = (offsets is not None or combiner is not None
+              or block_b is not None or table_hot is not None
+              or layout is not None)
+    if legacy and not _LEGACY_KWARGS_WARNED:
+        _LEGACY_KWARGS_WARNED = True
+        warnings.warn(
+            "loose embedding kwargs (offsets/combiner/block_b/table_hot/"
+            "layout) are deprecated; pass plan=EmbeddingPlan(...) instead",
+            DeprecationWarning, stacklevel=3)
+    from repro.sharding.policy import EmbeddingPlan
+    return EmbeddingPlan(
+        offsets=None if offsets is None else tuple(int(o) for o in offsets),
+        combiner=combiner or "sum",
+        block_b=8 if block_b is None else block_b,
+        table_hot=None if table_hot is None else
+        tuple(int(k) for k in table_hot),
+        layout=layout)
 
 
 def set_default_impl(impl: str) -> None:
@@ -52,43 +88,96 @@ def decode_attention(q, k_cache, v_cache, cache_pos, pos, *, window=None,
         q, k_cache, v_cache, cache_pos, pos, window=window, softcap=softcap)
 
 
-def fused_embedding_bag(pool, indices, weights=None, *, offsets=None,
-                        combiner="sum", impl=None, block_b=8,
+def fused_embedding_bag(pool, indices, weights=None, *, plan=None, impl=None,
+                        offsets=None, combiner=None, block_b=None,
                         table_hot=None, layout=None):
     """Multi-table fused embedding engine (one call for all tables).
 
-    pool (R, D) row-concatenated tables — or, with ``layout`` (a
-    ``repro.sharding.policy.PaddedLayout``), the (n_ps * max_range, D)
+    pool (R, D) row-concatenated tables — or, with a padded ``plan.layout``
+    (a ``repro.sharding.policy.PaddedLayout``), the (n_ps * max_range, D)
     flattening of the padded physically-sharded store; indices (B, T, H)
-    per-table-local rows (``offsets`` = static per-table row offsets, None
-    if already global flat rows); weights (B, T, H)? -> (B, T, D).
-    ``table_hot`` = per-table counts of frequency-packed hot leading rows
-    served from the VMEM hot-row cache on the Pallas path. All impls share
-    a custom VJP whose backward scatter-adds sparse table gradients via
-    ``segment_sum``.
+    per-table-local rows; weights (B, T, H)? -> (B, T, D).
 
-    ``table_hot`` and ``layout`` are static compile-time plans: a live
-    re-plan (``repro.train.replan``) permutes (and re-pads) the pool rows to
-    the new layout and re-enters here with the new plans — numerics are
+    ``plan`` (a ``repro.sharding.policy.EmbeddingPlan``) carries every
+    static knob: per-table ``offsets``, the ``combiner``, the Pallas
+    ``block_b``, the hot-row cache plan ``table_hot`` and the physical
+    ``layout``. Plans are frozen and hashable compile-time values: a live
+    re-plan (``repro.train.replan``) permutes (and re-pads) the pool rows
+    and re-enters here with ``plan.with_replan(...)`` — numerics are
     identical for any plan, so old-plan checkpoints restore bit-exactly
-    onto new ones.
+    onto new ones. All impls share a custom VJP whose backward dedupes and
+    scatter-adds sparse table gradients.
+
+    The loose ``offsets``/``combiner``/``block_b``/``table_hot``/``layout``
+    kwargs are deprecated (warn-once shim building a plan internally).
     """
     impl = impl or _DEFAULT_IMPL
+    if plan is None:
+        plan = _shim_plan(offsets, combiner, block_b, table_hot, layout)
+    else:
+        assert (offsets is None and combiner is None and block_b is None
+                and table_hot is None and layout is None), \
+            "pass the static knobs inside plan=, not alongside it"
     from repro.kernels import fused_embedding as fe
-    return fe.fused_embedding_bag(
-        pool, indices, weights, offsets=offsets, combiner=combiner,
-        method=impl, block_b=block_b, table_hot=table_hot, layout=layout)
+    return fe.fused_embedding_bag(pool, indices, weights, method=impl,
+                                  plan=plan)
 
 
-def embedding_bag(table, indices, weights=None, *, combiner="sum", impl=None):
+def sparse_row_grads(pool, indices, g, weights=None, *, plan):
+    """Fused sparse backward: bag cotangents → deduped COO row gradients.
+
+    The training-step entry to ``fused_embedding.sparse_row_grads`` (see
+    there for the contract): returns ``(rows, vals, dweights)`` where
+    scattering ``vals`` at ``rows`` reproduces the dense pool gradient bit
+    for bit, and ``(rows, vals)`` feed ``Optimizer.update_rows`` /
+    ``fused_row_update`` directly.
+    """
+    from repro.kernels import fused_embedding as fe
+    return fe.sparse_row_grads(pool, indices, g, weights, plan=plan)
+
+
+def fused_row_update(params, rows, vals, *state, kind, impl=None, block=8,
+                     **hyper):
+    """Row-wise optimizer update on deduped COO row grads (in place).
+
+    params (R, D) pool; rows (N,) deduplicated store rows (entries >= R are
+    inert padding); vals (N, D) summed row grads; ``state`` the optimizer's
+    moment pools in the same row space — ``(acc,)`` for ``kind="adagrad"``,
+    ``(m, v)`` for ``kind="adam"``. Returns the updated ``(params, *state)``.
+    Dispatches to the Pallas fused kernel ("pallas"/"interpret") or the XLA
+    gather/scatter fallback ("xla"); hyperparameters ride in ``hyper``
+    (see ``repro.kernels.fused_update``).
+    """
+    impl = impl or _DEFAULT_IMPL
+    from repro.kernels import fused_update as fu
+    if kind == "adagrad":
+        (acc,) = state
+        return fu.adagrad_row_update(params, acc, rows, vals, method=impl,
+                                     block=block, **hyper)
+    if kind == "adam":
+        m, v = state
+        return fu.adam_row_update(params, m, v, rows, vals, method=impl,
+                                  block=block, **hyper)
+    raise ValueError(f"unknown row-update kind: {kind!r}")
+
+
+def embedding_bag(table, indices, weights=None, *, plan=None, combiner=None,
+                  impl=None):
     """Fused embedding gather + pooling. table (R, D); indices (B, n); -> (B, D).
 
     Single-table convenience wrapper over ``fused_embedding_bag`` (T=1), so
     every caller gets the same combiner semantics (weights apply before
-    sum/mean/max) and the sparse-gradient VJP.
+    sum/mean/max) and the sparse-gradient VJP. Prefer ``plan=`` (an
+    ``EmbeddingPlan``); the loose ``combiner=`` kwarg is the deprecated
+    shim form.
     """
+    if plan is None:
+        plan = _shim_plan(None, combiner, None, None, None)
+    else:
+        assert combiner is None, \
+            "pass the combiner inside plan=, not alongside it"
     out = fused_embedding_bag(
         table, indices[:, None, :],
         None if weights is None else weights[:, None, :],
-        combiner=combiner, impl=impl)
+        plan=plan, impl=impl)
     return out[:, 0]

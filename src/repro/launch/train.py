@@ -73,6 +73,11 @@ def main() -> None:
                          "pooled rows as a padded (n_ps, max_range, D) array "
                          "so an equal GSPMD split of the leading axis places "
                          "exactly the balanced range plan (DLRM)")
+    ap.add_argument("--fused-update", action="store_true",
+                    help="fuse the sparse embedding backward + row-wise "
+                         "optimizer update into the train step: deduped COO "
+                         "row grads feed Optimizer.update_rows, touching "
+                         "only looked-up rows (DLRM; adagrad/adam)")
     ap.add_argument("--replan-every", type=int, default=0, metavar="N",
                     help="poll the hot tracker for a re-plan every N steps "
                          "(0 disables live re-planning)")
@@ -208,9 +213,16 @@ def train_dlrm(args) -> None:
               f"max_range={layout.max_range} physical rows/shard="
               f"{list(layout.shard_sizes)} "
               f"(+{layout.padded_rows - cfg.total_embedding_rows} pad rows)")
+    plan = cfg.embedding_plan(table_hot=table_hot, layout=layout,
+                              sparse_update=args.fused_update)
+    if args.fused_update and opt.update_rows is None:
+        raise SystemExit(f"--fused-update: optimizer {opt_name!r} has no "
+                         "row-update seam (use adagrad or adam)")
+    if args.fused_update:
+        print("fused sparse update: backward dedupe + row-wise "
+              f"{opt_name} on looked-up rows only")
     step_fn = jax.jit(trainer.make_dlrm_train_step(
-        cfg, opt, grad_compress=args.grad_compress, table_hot=table_hot,
-        layout=layout))
+        cfg, opt, grad_compress=args.grad_compress, plan=plan))
 
     tracker = HotTableTracker(
         cfg.table_rows, n_ps=args.n_ps, hot_budget=cfg.hot_rows_k,
@@ -249,9 +261,10 @@ def train_dlrm(args) -> None:
                 res = replan.apply_replan(state, cfg, opt, decision,
                                           remapper=remapper, opt_name=opt_name,
                                           grad_compress=args.grad_compress,
-                                          layout=layout)
+                                          layout=layout, plan=plan)
                 tracker.mark_applied(decision)
                 state, step_fn, layout = res.state, res.step_fn, res.layout
+                plan = res.plan
                 table_hot = decision.table_hot
                 vocab_ranges = decision.vocab_ranges
                 replanned = True
@@ -315,7 +328,8 @@ def train_dlrm_supervised(args) -> None:
 
     job = DLRMJob(cfg, ckpt, opt_name=opt_name, lr=args.lr,
                   ckpt_every=args.ckpt_every, n_ps=args.n_ps,
-                  padded=args.padded_shards, injector=injector)
+                  padded=args.padded_shards,
+                  sparse_update=args.fused_update, injector=injector)
     sup = Supervisor(job, SupervisorConfig(
         step_deadline_s=args.step_deadline, max_restarts=args.max_restarts,
         seed=args.chaos_seed))

@@ -128,13 +128,47 @@ def _pool2d(store, layout):
     return store.reshape((layout.padded_rows,) + store.shape[2:])
 
 
+def _resolve_plan(cfg: DLRMConfig, plan, table_hot, layout):
+    """One ``EmbeddingPlan`` per forward: the explicit plan wins; otherwise
+    the legacy loose kwargs build the config's default plan
+    (``table_hot=None`` → ``cfg.table_hot``, matching the old behavior)."""
+    if plan is not None:
+        return plan
+    return cfg.embedding_plan(table_hot=table_hot, layout=layout)
+
+
+def sparse_param_keys(cfg: DLRMConfig) -> tuple:
+    """The pooled (vocab-row) parameter leaves the fused sparse backward +
+    row-wise optimizer update handles; everything else is dense."""
+    return ("tables", "wide") if cfg.kind == "wide_deep" else ("tables",)
+
+
+def dlrm_embeddings(params, batch, cfg: DLRMConfig, plan) -> Dict[str, Any]:
+    """Every pooled-store lookup of one forward, in one dict.
+
+    The seam the fused sparse-update training step differentiates at: the
+    returned bag outputs are the only consumers of the pooled stores, so
+    their cotangents (via ``jax.vjp``) feed ``ops.sparse_row_grads``
+    directly instead of materializing dense (R, D) gradients.
+
+    Returns ``{"deep": (B, n_tables, D)}`` plus ``{"wide": (B, n_tables, 1)}``
+    for wide_deep.
+    """
+    embs = {"deep": ops.fused_embedding_bag(
+        _pool2d(params["tables"], plan.layout), batch["sparse"], plan=plan)}
+    if cfg.kind == "wide_deep":
+        embs["wide"] = ops.fused_embedding_bag(
+            _pool2d(params["wide"], plan.layout), batch["sparse"],
+            plan=plan.with_combiner("sum"))
+    return embs
+
+
 def _field_embeddings(params, batch, cfg: DLRMConfig, table_hot=None,
-                      layout=None):
+                      layout=None, plan=None):
     """All per-field embeddings in ONE fused call. -> (B, n_tables, D)."""
+    plan = _resolve_plan(cfg, plan, table_hot, layout)
     return ops.fused_embedding_bag(
-        _pool2d(params["tables"], layout), batch["sparse"],
-        offsets=cfg.table_offsets, combiner=cfg.pooling,
-        table_hot=table_hot, layout=layout)
+        _pool2d(params["tables"], plan.layout), batch["sparse"], plan=plan)
 
 
 def _deep_mlp(params, x, cfg: DLRMConfig):
@@ -144,33 +178,23 @@ def _deep_mlp(params, x, cfg: DLRMConfig):
     return (h @ params["mlp"]["w_out"] + params["mlp"]["b_out"])[:, 0]
 
 
-def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None,
-                 layout=None) -> jnp.ndarray:
-    """batch: {dense (B,n_dense) f32, sparse (B,m,hot) i32} -> logit (B,).
+def dlrm_forward_from_embeddings(params, batch, embs: Dict[str, Any],
+                                 cfg: DLRMConfig) -> jnp.ndarray:
+    """The dense interaction network given the pooled-store lookups.
 
-    ``table_hot`` overrides the per-table hot-row cache prefixes for the
-    fused embedding engine (defaults to ``cfg.table_hot``, i.e. the
-    ``cfg.hot_rows_k`` budget split across tables; frequency-aware jobs pass
-    a measured plan from ``ParameterPlacementService.hot_plan``).
-    ``layout`` declares ``params``' pooled stores padded
-    (``(n_ps, max_range, ...)``, see ``init_dlrm``); sparse ids stay in the
-    flat space — translation happens inside the fused engine.
+    ``embs`` is ``dlrm_embeddings``'s output; no pooled store is read here,
+    so differentiating this function w.r.t. ``embs`` (and the dense params)
+    is the whole backward minus the sparse scatter — the split the fused
+    sparse-update step exploits.
     """
-    if table_hot is None:
-        table_hot = cfg.table_hot
-    emb = _field_embeddings(params, batch, cfg, table_hot, layout)  # (B, m, D)
-    emb = constrain(emb, ("batch", None, None))
+    emb = constrain(embs["deep"], ("batch", None, None))     # (B, m, D)
     B = emb.shape[0]
     x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
 
     if cfg.kind == "wide_deep":
         deep = _deep_mlp(params, x0, cfg)
-        wide_emb = ops.fused_embedding_bag(
-            _pool2d(params["wide"], layout), batch["sparse"],
-            offsets=cfg.table_offsets, combiner="sum",
-            table_hot=table_hot, layout=layout)              # (B, m, 1)
         wide = batch["dense"] @ params["wide_dense"] + jnp.sum(
-            wide_emb[..., 0], axis=1)
+            embs["wide"][..., 0], axis=1)
         return deep + wide
 
     if cfg.kind == "dcn":
@@ -194,25 +218,49 @@ def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None,
     raise ValueError(cfg.kind)
 
 
+def dlrm_forward(params, batch, cfg: DLRMConfig, table_hot=None,
+                 layout=None, plan=None) -> jnp.ndarray:
+    """batch: {dense (B,n_dense) f32, sparse (B,m,hot) i32} -> logit (B,).
+
+    ``plan`` (an ``EmbeddingPlan``) carries every static knob of the fused
+    embedding engine; the legacy ``table_hot``/``layout`` kwargs build the
+    config's default plan (``table_hot=None`` → ``cfg.table_hot``; sparse
+    ids stay in the flat space — translation happens inside the engine).
+    The forward is ``dlrm_embeddings`` (every pooled-store lookup) composed
+    with ``dlrm_forward_from_embeddings`` (the dense interaction network).
+    """
+    plan = _resolve_plan(cfg, plan, table_hot, layout)
+    embs = dlrm_embeddings(params, batch, cfg, plan)
+    return dlrm_forward_from_embeddings(params, batch, embs, cfg)
+
+
+def dlrm_loss_from_embeddings(params, batch, embs: Dict[str, Any],
+                              cfg: DLRMConfig) -> jnp.ndarray:
+    """BCE-with-logits given precomputed pooled-store lookups."""
+    logit = dlrm_forward_from_embeddings(params, batch, embs, cfg)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
 def dlrm_loss(params, batch, cfg: DLRMConfig, table_hot=None,
-              layout=None) -> jnp.ndarray:
+              layout=None, plan=None) -> jnp.ndarray:
     """Binary cross-entropy with logits on CTR labels.
 
-    ``table_hot`` and ``layout`` are forwarded to ``dlrm_forward`` so a live
-    re-plan's measured cache plan and the physical padded placement reach
-    the fused engine (None = ``cfg.table_hot`` / flat layout).
+    ``plan`` (or the legacy ``table_hot``/``layout`` kwargs) is forwarded to
+    ``dlrm_forward`` so a live re-plan's measured cache plan and the
+    physical padded placement reach the fused engine.
     """
     logit = dlrm_forward(params, batch, cfg, table_hot=table_hot,
-                         layout=layout)
+                         layout=layout, plan=plan)
     y = batch["label"].astype(jnp.float32)
     return jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
 
 
 def dlrm_auc(params, batch, cfg: DLRMConfig, table_hot=None,
-             layout=None) -> jnp.ndarray:
+             layout=None, plan=None) -> jnp.ndarray:
     """Pairwise AUC estimate on one batch (for Fig 8 convergence tracking)."""
     logit = dlrm_forward(params, batch, cfg, table_hot=table_hot,
-                         layout=layout)
+                         layout=layout, plan=plan)
     y = batch["label"].astype(jnp.float32)
     pos = y[:, None] > y[None, :]
     gt = (logit[:, None] > logit[None, :]).astype(jnp.float32)

@@ -551,6 +551,70 @@ class PaddedLayout:
         return jnp.take(flat2d, jnp.asarray(self.row_translation()), axis=0)
 
 
+@dataclass(frozen=True)
+class EmbeddingPlan:
+    """The complete static plan one fused embedding call compiles against.
+
+    Collapses the kwargs that had accreted on ``fused_embedding_bag``
+    (``offsets``, ``combiner``, ``block_b``, ``table_hot``, ``layout``) plus
+    the fused sparse-update knobs into one frozen, hashable value — the
+    single object threaded from the launcher through the trainer, the
+    re-planner and ``kernels/ops.py`` down to the kernel's jit-static
+    custom-VJP metadata. Hashability means a plan change (a live re-plan
+    swapping ``table_hot``/``layout``) recompiles the step exactly once,
+    and two calls with equal plans share a compilation cache entry.
+
+    Fields:
+      offsets:       static per-table flat-pool row offsets
+                     (``kernels.fused_embedding.table_offsets`` output);
+                     ``None`` means indices are already global flat rows.
+      combiner:      "sum" | "mean" | "max" bag pooling.
+      block_b:       batch rows per Pallas grid step (forward kernel).
+      table_hot:     per-table hot-prefix sizes for the VMEM hot-row cache;
+                     ``None``/all-zero disables the cache.
+      layout:        optional ``PaddedLayout`` — the padded physical
+                     placement of the pool this plan addresses.
+      sparse_update: opt the training step into the fused sparse backward +
+                     row-wise optimizer update (``Optimizer.update_rows``)
+                     instead of the dense ``segment_sum`` gradient path.
+      update_block:  rows per grid step of the fused row-update kernel.
+    """
+    offsets: Optional[Tuple[int, ...]] = None
+    combiner: str = "sum"
+    block_b: int = 8
+    table_hot: Optional[Tuple[int, ...]] = None
+    layout: Optional[PaddedLayout] = None
+    sparse_update: bool = False
+    update_block: int = 8
+
+    def __post_init__(self) -> None:
+        if self.combiner not in ("sum", "mean", "max"):
+            raise ValueError(f"unknown combiner: {self.combiner!r}")
+        if self.offsets is not None:
+            object.__setattr__(
+                self, "offsets", tuple(int(o) for o in self.offsets))
+        if self.table_hot is not None:
+            object.__setattr__(
+                self, "table_hot", tuple(int(k) for k in self.table_hot))
+        object.__setattr__(self, "block_b", int(self.block_b))
+        object.__setattr__(self, "update_block", int(self.update_block))
+
+    @property
+    def n_tables(self) -> Optional[int]:
+        """Table count the plan describes (``None`` when offsets are unset)."""
+        return None if self.offsets is None else len(self.offsets)
+
+    def with_combiner(self, combiner: str) -> "EmbeddingPlan":
+        """Same plan, different bag pooling (the wide tower's sum view)."""
+        return replace(self, combiner=combiner)
+
+    def with_replan(self, table_hot: Optional[Sequence[int]],
+                    layout: Optional[PaddedLayout]) -> "EmbeddingPlan":
+        """The plan a live re-plan recompiles with: new cache + placement."""
+        hot = None if table_hot is None else tuple(int(k) for k in table_hot)
+        return replace(self, table_hot=hot, layout=layout)
+
+
 def padded_layout_for_ranges(
         ranges: Sequence[Tuple[int, int]]) -> PaddedLayout:
     """Plan the physical padded pool layout for a contiguous range plan.

@@ -15,28 +15,81 @@ import jax.numpy as jnp
 
 
 class Optimizer(NamedTuple):
+    """(init, update) pytree transform + the optional sparse row seam.
+
+    ``update_rows(rows, row_grads, state, params)``, when present, applies
+    the row-wise update of this optimizer to exactly the given rows of one
+    pooled (R, D) parameter leaf: ``rows`` are deduplicated store rows
+    (entries ``>= R`` are padding and ignored), ``row_grads`` the matching
+    accumulated gradient rows, ``state`` the per-leaf slice of the optimizer
+    state (moment pools in the same row space, plus shared scalars such as
+    ``count``). Returns ``(new_params, new_leaf_state)`` where
+    ``new_leaf_state`` holds only the per-leaf moment arrays — shared
+    scalars are advanced by the dense-side ``update``. Duplicated rows are
+    a contract violation (the fused backward dedupes); clipping is the
+    caller's job (``clip_norm`` advertises this optimizer's default so the
+    trainer can clip the joint dense+sparse tree once).
+    """
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+    update_rows: Optional[Callable[[Any, Any, Any, Any], Tuple[Any, Any]]] = None
+    clip_norm: Optional[float] = None
+
+
+class SparseRowGrad(NamedTuple):
+    """COO gradient leaf for a pooled (R, D) parameter: rows + values.
+
+    ``rows`` (N,) int32 deduplicated store rows (entries equal to the pool's
+    row count are padding produced by the static-shape dedupe and carry zero
+    values); ``vals`` (N, D) f32 accumulated cotangents. A NamedTuple is a
+    pytree node, so a grad tree may hold these leaves in place of dense
+    arrays — ``global_norm``/``clip_by_global_norm``/``compress_grads``
+    skip the integer ``rows`` child via their inexact-dtype guard.
+    """
+    rows: Any
+    vals: Any
+
+    def to_dense(self, num_rows: int) -> jnp.ndarray:
+        """Scatter-add back to the dense (R, D) gradient (reference oracle).
+
+        Rows ``>= num_rows`` are dropped by JAX's out-of-bounds scatter
+        semantics — exactly the padding contract.
+        """
+        D = self.vals.shape[-1]
+        return jnp.zeros((num_rows, D), self.vals.dtype).at[self.rows].add(
+            self.vals)
 
 
 def _tree_zeros_like(params, dtype=None):
     return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
 
 
+def _inexact(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact)
+
+
 def global_norm(tree) -> jnp.ndarray:
-    leaves = jax.tree.leaves(tree)
+    """L2 norm over every inexact leaf (int leaves — e.g. ``SparseRowGrad``
+    rows or step counters — carry no gradient mass and are skipped)."""
+    leaves = [l for l in jax.tree.leaves(tree) if _inexact(l)]
     return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
 
 
 def clip_by_global_norm(grads, max_norm: float):
     norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
-    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+    return jax.tree.map(
+        lambda g: g * scale.astype(g.dtype) if _inexact(g) else g, grads), norm
 
 
 def compress_grads(grads, dtype=jnp.bfloat16):
-    """Cast-compress gradients (halves all-reduce bytes; lossy in mantissa)."""
-    return jax.tree.map(lambda g: g.astype(dtype).astype(g.dtype), grads)
+    """Cast-compress gradients (halves all-reduce bytes; lossy in mantissa).
+
+    Integer leaves (sparse row ids) are addressing, not gradient payload —
+    they pass through untouched.
+    """
+    return jax.tree.map(
+        lambda g: g.astype(dtype).astype(g.dtype) if _inexact(g) else g, grads)
 
 
 # ---------------------------------------------------------------------------
@@ -87,7 +140,21 @@ def adam(lr: float, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
                 mh, vh, params)
         return updates, new_state
 
-    return Optimizer(init, update)
+    def update_rows(rows, row_grads, state, params):
+        # lazy (row-wise) adam: moments of untouched rows are NOT decayed —
+        # the standard sparse-adam semantics; bias correction uses the
+        # shared step count the dense-side update advances
+        from repro.kernels import ops as kernel_ops
+        tc = (state["count"] + 1).astype(jnp.float32)
+        new_params, new_m, new_v = kernel_ops.fused_row_update(
+            params, rows, row_grads, state["m"], state["v"], kind="adam",
+            lr=lr, b1=b1, b2=b2, eps=eps, count=tc,
+            weight_decay=weight_decay)
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update,
+                     update_rows=None if master_weights else update_rows,
+                     clip_norm=clip_norm)
 
 
 def adamw(lr: float, *, weight_decay: float = 0.01, **kw) -> Optimizer:
@@ -111,7 +178,17 @@ def adagrad(lr: float, *, eps: float = 1e-10,
             grads, acc, params)
         return updates, {"acc": acc}
 
-    return Optimizer(init, update)
+    def update_rows(rows, row_grads, state, params):
+        # row-wise adagrad is bit-exact vs the dense path: untouched rows
+        # see g == 0, so their accumulator and params are exact no-ops
+        from repro.kernels import ops as kernel_ops
+        new_params, new_acc = kernel_ops.fused_row_update(
+            params, rows, row_grads, state["acc"], kind="adagrad",
+            lr=lr, eps=eps)
+        return new_params, {"acc": new_acc}
+
+    return Optimizer(init, update, update_rows=update_rows,
+                     clip_norm=clip_norm)
 
 
 def sgd(lr: float, *, momentum: float = 0.0,
@@ -132,7 +209,7 @@ def sgd(lr: float, *, momentum: float = 0.0,
         updates = jax.tree.map(lambda g, p: (-lr * g).astype(p.dtype), grads, params)
         return updates, state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, clip_norm=clip_norm)
 
 
 def apply_updates(params, updates):

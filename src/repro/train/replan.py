@@ -51,8 +51,8 @@ from repro.core.flash_checkpoint import FlashCheckpoint
 from repro.core.sharding_service import ReplanDecision
 from repro.kernels.fused_embedding import table_offsets
 from repro.sharding.policy import (
-    PaddedLayout, ShardingPolicy, make_dlrm_policy, padded_layout_for_ranges,
-    uniform_vocab_ranges,
+    EmbeddingPlan, PaddedLayout, ShardingPolicy, make_dlrm_policy,
+    padded_layout_for_ranges, uniform_vocab_ranges,
 )
 from repro.train import elastic
 from repro.train import trainer as trainer_mod
@@ -223,6 +223,7 @@ class ReplanResult:
     policy: ShardingPolicy                  # carries the balanced vocab ranges
     decision: ReplanDecision
     layout: Optional[PaddedLayout] = None   # physical layout of `state`
+    plan: Optional[EmbeddingPlan] = None    # the plan `step_fn` compiled with
 
 
 def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
@@ -230,7 +231,8 @@ def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
                  remapper: Optional[EmbeddingRemapper] = None,
                  mesh=None, opt_name: str = "adagrad",
                  grad_compress: bool = False,
-                 layout: Optional[PaddedLayout] = None) -> ReplanResult:
+                 layout: Optional[PaddedLayout] = None,
+                 plan: Optional[EmbeddingPlan] = None) -> ReplanResult:
     """Execute one live re-plan on a running job's state.
 
     The seamless-migration recipe of §5.2 applied to row placement: permute
@@ -266,6 +268,13 @@ def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
       layout:    the padded physical layout ``state`` currently lives on
                  (None = flat). Padded jobs come back padded on the NEW
                  layout (``result.layout``).
+      plan:      the ``EmbeddingPlan`` the OLD step was compiled with (None
+                 = the config default). The recompiled step runs under
+                 ``plan.with_replan(decision.table_hot, new_layout)`` —
+                 every other knob (combiner, ``sparse_update``, blocks)
+                 carries over, so a fused sparse-update job stays fused
+                 across a re-plan. The applied plan rides back on
+                 ``result.plan``.
 
     Returns a ``ReplanResult``; training continues with ``result.state`` and
     ``result.step_fn`` on remapped batches.
@@ -285,17 +294,19 @@ def apply_replan(state, cfg: DLRMConfig, optimizer: Optimizer,
         shardings = elastic.dlrm_state_shardings(cfg, opt_name, policy,
                                                  layout=new_layout)
         new_state = jax.device_put(new_state, shardings)
+    base_plan = plan if plan is not None else cfg.embedding_plan()
+    new_plan = base_plan.with_replan(decision.table_hot, new_layout)
     step_fn = jax.jit(trainer_mod.make_dlrm_train_step(
-        cfg, optimizer, grad_compress=grad_compress,
-        table_hot=decision.table_hot, layout=new_layout))
+        cfg, optimizer, grad_compress=grad_compress, plan=new_plan))
     return ReplanResult(state=new_state, step_fn=step_fn, policy=policy,
-                        decision=decision, layout=new_layout)
+                        decision=decision, layout=new_layout, plan=new_plan)
 
 
 def restore_on_plan(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
                     ckpt: FlashCheckpoint, decision: ReplanDecision, *,
                     mesh=None, step: Optional[int] = None,
-                    grad_compress: bool = False, padded: bool = False
+                    grad_compress: bool = False, padded: bool = False,
+                    plan: Optional[EmbeddingPlan] = None
                     ) -> Tuple[Dict[str, Any], int, Callable, ShardingPolicy,
                                EmbeddingRemapper]:
     """Restore an OLD-plan layout-stamped checkpoint onto a NEW plan.
@@ -319,6 +330,10 @@ def restore_on_plan(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
                 and ``step_fn`` is compiled for it. A checkpoint stamped
                 padded implies this automatically (a padded job stays
                 padded across restarts).
+      plan:     the job's ``EmbeddingPlan`` template (None = config
+                default); the step recompiles under
+                ``plan.with_replan(decision.table_hot, new layout)``, so
+                fused sparse-update jobs resume fused.
 
     Returns ``(state, restored_step, step_fn, policy, remapper)``; when
     padded, rebuild the layout with
@@ -340,9 +355,10 @@ def restore_on_plan(cfg: DLRMConfig, optimizer: Optimizer, opt_name: str,
         state = jax.device_put(
             state, elastic.dlrm_state_shardings(cfg, opt_name, policy,
                                                 layout=new_layout))
+    base_plan = plan if plan is not None else cfg.embedding_plan()
+    new_plan = base_plan.with_replan(decision.table_hot, new_layout)
     step_fn = jax.jit(trainer_mod.make_dlrm_train_step(
-        cfg, optimizer, grad_compress=grad_compress,
-        table_hot=decision.table_hot, layout=new_layout))
+        cfg, optimizer, grad_compress=grad_compress, plan=new_plan))
     return state, restored_step, step_fn, policy, remapper
 
 

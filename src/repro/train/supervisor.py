@@ -78,6 +78,9 @@ class DLRMJob:
       ckpt_every: checkpoint cadence in global steps.
       n_ps:       PS shard count of the (padded) placement plan.
       padded:     materialize physically-unequal PS shards (PaddedLayout).
+      sparse_update: compile the fused sparse backward + row-wise optimizer
+                  update into the step (``EmbeddingPlan.sparse_update``);
+                  requires an optimizer with an ``update_rows`` seam.
       injector:   optional ``FaultInjector`` wired through the batch hook.
     """
 
@@ -85,6 +88,7 @@ class DLRMJob:
                  opt_name: str = "adagrad", lr: float = 0.05,
                  init_seed: int = 0, data_seed: int = 11,
                  ckpt_every: int = 10, n_ps: int = 4, padded: bool = False,
+                 sparse_update: bool = False,
                  injector: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.ckpt = ckpt
@@ -99,6 +103,7 @@ class DLRMJob:
         if padded:
             self.layout = padded_layout_for_ranges(
                 uniform_vocab_ranges(cfg.total_embedding_rows, self.n_ps))
+        self.sparse_update = bool(sparse_update)
         self.table_hot = None
         self.vocab_ranges = None
         self.remapper = replan.EmbeddingRemapper(cfg.table_rows)
@@ -114,7 +119,9 @@ class DLRMJob:
     # ------------------------------------------------------------ lifecycle
     def _compile(self) -> None:
         jitted = jax.jit(trainer_mod.make_dlrm_train_step(
-            self.cfg, self.opt, table_hot=self.table_hot, layout=self.layout))
+            self.cfg, self.opt, plan=self.cfg.embedding_plan(
+                table_hot=self.table_hot, layout=self.layout,
+                sparse_update=self.sparse_update)))
         if self.state is not None:
             # warm the compile cache on a throwaway step NOW, outside the
             # watchdog deadline — else every (re)compile's first step reads

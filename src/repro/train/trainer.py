@@ -112,20 +112,126 @@ def dlrm_train_state_specs(cfg: DLRMConfig, opt_name: str,
 
 def make_dlrm_train_step(cfg: DLRMConfig, optimizer: Optimizer,
                          grad_compress: bool = False, *,
-                         table_hot=None, layout=None) -> Callable:
-    """DLRM train step; ``table_hot`` bakes a measured hot-row cache plan
-    into the compiled step and ``layout`` the padded physical placement
-    (a live re-plan recompiles with the new plans)."""
+                         table_hot=None, layout=None, plan=None) -> Callable:
+    """DLRM train step compiled against one ``EmbeddingPlan``.
+
+    ``plan`` bakes every static knob of the fused embedding engine into the
+    compiled step — the hot-row cache plan, the padded physical placement,
+    and whether the step runs the fused sparse backward + row-wise
+    optimizer update (``plan.sparse_update``, requires an optimizer with an
+    ``update_rows`` seam; otherwise the dense path runs). The legacy
+    ``table_hot``/``layout`` kwargs build the config's default plan. A live
+    re-plan recompiles with a new plan.
+    """
+    if plan is None:
+        plan = cfg.embedding_plan(table_hot=table_hot, layout=layout)
+    if plan.sparse_update and optimizer.update_rows is not None:
+        return _make_dlrm_sparse_step(cfg, optimizer, grad_compress, plan)
+
     def train_step(state, batch):
         loss, grads = jax.value_and_grad(
-            lambda p: dlrm_loss(p, batch, cfg, table_hot=table_hot,
-                                layout=layout))(state["params"])
+            lambda p: dlrm_loss(p, batch, cfg, plan=plan))(state["params"])
         if grad_compress:
             grads = optim_mod.compress_grads(grads)
         gnorm = optim_mod.global_norm(grads)
         updates, opt_state = optimizer.update(grads, state["opt"], state["params"])
         params = optim_mod.apply_updates(state["params"], updates)
         new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def _split_opt_state(opt_state, sparse_keys):
+    """Split a dict-of-mirrors optimizer state at the pooled-store leaves.
+
+    Entries mirroring the param tree (dicts containing every sparse key)
+    are split into a dense remainder + one slice per pooled store; shared
+    scalars (adam's ``count``) stay in the dense state AND ride along in
+    every per-leaf slice, as ``Optimizer.update_rows`` expects.
+    """
+    dense_state, leaf_state = {}, {k: {} for k in sparse_keys}
+    for name, sub in opt_state.items():
+        if isinstance(sub, dict) and all(k in sub for k in sparse_keys):
+            dense_state[name] = {k: v for k, v in sub.items()
+                                 if k not in sparse_keys}
+            for k in sparse_keys:
+                leaf_state[k][name] = sub[k]
+        else:
+            dense_state[name] = sub
+            for k in sparse_keys:
+                leaf_state[k][name] = sub
+    return dense_state, leaf_state
+
+
+def _make_dlrm_sparse_step(cfg: DLRMConfig, optimizer: Optimizer,
+                           grad_compress: bool, plan) -> Callable:
+    """The fused sparse-update DLRM step (``plan.sparse_update=True``).
+
+    Instead of materializing dense (R, D) gradients for the pooled stores
+    and letting the optimizer touch every row, the step (a) differentiates
+    only the dense interaction network via ``jax.vjp`` at the
+    ``dlrm_embeddings`` seam, (b) turns each store's bag cotangent into
+    deduped COO row grads (``ops.sparse_row_grads``, a ``SparseRowGrad``
+    grad leaf), and (c) applies the row-wise optimizer update to exactly
+    those rows (``Optimizer.update_rows`` → the fused row-update kernel,
+    moments updated in place in the pool layout). Clipping happens once
+    over the joint dense+sparse tree (``optimizer.clip_norm``), so the
+    dense-subtree clip inside ``optimizer.update`` is an exact no-op.
+    """
+    from repro.kernels import ops as kernel_ops
+    from repro.models import dlrm as dlrm_mod
+
+    sparse_keys = dlrm_mod.sparse_param_keys(cfg)
+    emb_of = {"tables": "deep", "wide": "wide"}
+    plan_of = {"tables": plan, "wide": plan.with_combiner("sum")}
+
+    def train_step(state, batch):
+        params = state["params"]
+        embs = dlrm_mod.dlrm_embeddings(params, batch, cfg, plan)
+        dense_params = {k: v for k, v in params.items()
+                        if k not in sparse_keys}
+        loss, vjp = jax.vjp(
+            lambda dp, e: dlrm_mod.dlrm_loss_from_embeddings(
+                dp, batch, e, cfg),
+            dense_params, embs)
+        dense_grads, g_embs = vjp(jnp.ones((), loss.dtype))
+
+        grads = dict(dense_grads)
+        for k in sparse_keys:
+            pool = dlrm_mod._pool2d(params[k], plan.layout)
+            rows, vals, _ = kernel_ops.sparse_row_grads(
+                pool, batch["sparse"], g_embs[emb_of[k]], plan=plan_of[k])
+            grads[k] = optim_mod.SparseRowGrad(rows, vals)
+
+        if grad_compress:
+            grads = optim_mod.compress_grads(grads)
+        gnorm = optim_mod.global_norm(grads)
+        if optimizer.clip_norm is not None:
+            grads, _ = optim_mod.clip_by_global_norm(grads,
+                                                     optimizer.clip_norm)
+
+        dense_state, leaf_state = _split_opt_state(state["opt"], sparse_keys)
+        dense_only = {k: v for k, v in grads.items() if k not in sparse_keys}
+        updates, new_dense_state = optimizer.update(
+            dense_only, dense_state, dense_params)
+        new_params = dict(optim_mod.apply_updates(dense_params, updates))
+        new_opt = dict(new_dense_state)
+        for k in sparse_keys:
+            store = params[k]
+            pool = dlrm_mod._pool2d(store, plan.layout)
+            leaf = {name: (dlrm_mod._pool2d(arr, plan.layout)
+                           if getattr(arr, "shape", None) == store.shape
+                           else arr)
+                    for name, arr in leaf_state[k].items()}
+            new_pool, new_leaf = optimizer.update_rows(
+                grads[k].rows, grads[k].vals, leaf, pool)
+            new_params[k] = new_pool.reshape(store.shape)
+            for name, arr in new_leaf.items():
+                new_opt[name] = dict(new_opt[name])
+                new_opt[name][k] = arr.reshape(leaf_state[k][name].shape)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
         return new_state, {"loss": loss, "grad_norm": gnorm}
 
     return train_step

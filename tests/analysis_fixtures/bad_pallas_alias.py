@@ -1,0 +1,59 @@
+"""pallas-vmem fixture: broken input_output_aliases literals (positive).
+
+Two decidable alias bugs: an input index that miscounts the SMEM operand
+(aliasing a VMEM-blocked input onto an ``ANY`` output) and an output
+index past the output list.  Both only explode at lowering time on real
+hardware paths; the dict literal is fully static.
+"""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, p_hbm, p_out, y_out):
+    del idx_ref, p_hbm, p_out   # p_out is written via manual DMA in the idiom
+    y_out[...] = x_ref[...]
+
+
+def aliased_wrong_operand(params, idx, x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((8, 8), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(params.shape, params.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        # miscounted: names the VMEM-blocked x (input 1), not the ANY pool
+        # (input 2), so the aliased pair straddles memory spaces
+        input_output_aliases={1: 0},
+    )(idx, x, params)
+
+
+def aliased_missing_output(params, idx, x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((8, 8), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(params.shape, params.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        input_output_aliases={2: 5},    # output 5 of 2
+    )(idx, x, params)

@@ -1,0 +1,46 @@
+"""pallas-dma fixture: semaphore slot past the DMA((k,)) capacity (positive).
+
+The kernel declares a two-slot DMA semaphore array but indexes slot 2 —
+on real TPUs that aliases whatever semaphore lives next door; interpret
+mode happily runs it.  Every copy is start/wait paired so only the slot
+bound trips.
+"""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _row_kernel(rows_ref, p_hbm, p_out, stage, sem, *, R):
+    del p_hbm
+    row = rows_ref[0]
+    fetch = pltpu.make_async_copy(
+        p_out.at[pl.ds(row, 1), :], stage, sem.at[0])
+    fetch.start()
+    fetch.wait()
+    stage[...] = stage[...] * 2.0
+    store = pltpu.make_async_copy(
+        stage, p_out.at[pl.ds(row, 1), :], sem.at[2])   # slot 2 of DMA((2,))
+    store.start()
+    store.wait()
+
+
+def double_rows(params, rows):
+    R, D = params.shape
+    kernel = functools.partial(_row_kernel, R=R)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows.shape[0],),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct(params.shape, params.dtype),
+        input_output_aliases={1: 0},
+        scratch_shapes=[
+            pltpu.VMEM((1, D), params.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )(rows, params)

@@ -21,11 +21,17 @@ from repro.kernels import common, ops, ref
 from repro.kernels import embedding_bag as legacy_eb
 from repro.kernels.fused_embedding import fused_embedding_bag, table_offsets
 from repro.models import dlrm
+from repro.sharding.policy import EmbeddingPlan
 
 jax.config.update("jax_platform_name", "cpu")
 
 ROWS_PER_TABLE = (40, 24, 64, 8)
 OFFSETS = table_offsets(ROWS_PER_TABLE)
+
+
+def _plan(combiner="sum", block_b=8, **kw):
+    return EmbeddingPlan(offsets=OFFSETS, combiner=combiner,
+                         block_b=block_b, **kw)
 
 
 def _inputs(B=6, H=4, D=16, seed=0):
@@ -51,8 +57,8 @@ def test_table_offsets():
 def test_fused_forward_matches_ref(combiner, weighted, method):
     pool, idx, w = _inputs()
     weights = w if weighted else None
-    out = fused_embedding_bag(pool, idx, weights, offsets=OFFSETS,
-                              combiner=combiner, method=method, block_b=4)
+    out = fused_embedding_bag(pool, idx, weights, method=method,
+                              plan=_plan(combiner, block_b=4))
     expect = ref.fused_embedding_bag_ref(pool, idx, weights, offsets=OFFSETS,
                                          combiner=combiner)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
@@ -62,8 +68,8 @@ def test_fused_forward_matches_ref(combiner, weighted, method):
 def test_fused_partial_batch_block():
     """B not divisible by block_b exercises the clamped tail block."""
     pool, idx, _ = _inputs(B=7)
-    out = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                              method="interpret", block_b=4)
+    out = fused_embedding_bag(pool, idx, method="interpret",
+                              plan=_plan(block_b=4))
     expect = ref.fused_embedding_bag_ref(pool, idx, offsets=OFFSETS,
                                          combiner="sum")
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
@@ -77,8 +83,7 @@ def test_fused_grads_match_ref(combiner, weighted):
     weights = w if weighted else None
 
     def loss_fused(p, wt):
-        out = fused_embedding_bag(p, idx, wt, offsets=OFFSETS,
-                                  combiner=combiner)
+        out = fused_embedding_bag(p, idx, wt, plan=_plan(combiner))
         return jnp.sum(jnp.sin(out))
 
     def loss_ref(p, wt):
@@ -102,8 +107,8 @@ def test_fused_grad_through_pallas_forward():
     """The custom VJP makes the Pallas forward trainable (interpret here)."""
     pool, idx, _ = _inputs()
     g_int = jax.grad(lambda p: jnp.sum(fused_embedding_bag(
-        p, idx, offsets=OFFSETS, combiner="mean", method="interpret",
-        block_b=4)))(pool)
+        p, idx, method="interpret",
+        plan=_plan("mean", block_b=4))))(pool)
     g_ref = jax.grad(lambda p: jnp.sum(ref.fused_embedding_bag_ref(
         p, idx, offsets=OFFSETS, combiner="mean")))(pool)
     np.testing.assert_allclose(np.asarray(g_int), np.asarray(g_ref),
@@ -115,7 +120,7 @@ def test_fused_max_grad_with_duplicate_indices():
     pool, idx, _ = _inputs()
     idx = idx.at[:, :, 1].set(idx[:, :, 0])    # force in-bag duplicates
     g_f = jax.grad(lambda p: jnp.sum(fused_embedding_bag(
-        p, idx, offsets=OFFSETS, combiner="max")))(pool)
+        p, idx, plan=_plan("max"))))(pool)
     g_r = jax.grad(lambda p: jnp.sum(ref.fused_embedding_bag_ref(
         p, idx, offsets=OFFSETS, combiner="max")))(pool)
     np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_r),
@@ -126,7 +131,7 @@ def test_fused_grad_is_sparse_scatter():
     """Rows never looked up get exactly zero gradient (segment_sum dedup)."""
     pool, idx, _ = _inputs()
     g = jax.grad(lambda p: jnp.sum(fused_embedding_bag(
-        p, idx, offsets=OFFSETS, combiner="sum")))(pool)
+        p, idx, plan=_plan())))(pool)
     flat = (idx + jnp.asarray(OFFSETS)[None, :, None]).reshape(-1)
     untouched = np.setdiff1d(np.arange(pool.shape[0]), np.asarray(flat))
     assert untouched.size > 0
@@ -148,7 +153,7 @@ def test_dlrm_forward_single_fused_call(base, expected_calls, monkeypatch):
     real = ops.fused_embedding_bag
 
     def counting(*args, **kwargs):
-        calls.append(kwargs.get("combiner", "sum"))
+        calls.append(kwargs["plan"].combiner)
         return real(*args, **kwargs)
 
     monkeypatch.setattr(ops, "fused_embedding_bag", counting)
@@ -199,10 +204,59 @@ def test_ops_embedding_bag_weighted_combiner(combiner):
     w = jax.random.uniform(jax.random.fold_in(key, 2), (5, 3))
     expect = ref.embedding_bag_ref(table, idx, w, combiner=combiner)
     for impl in ("xla", "interpret"):
-        out = ops.embedding_bag(table, idx, w, combiner=combiner, impl=impl)
+        out = ops.embedding_bag(table, idx, w,
+                                plan=EmbeddingPlan(combiner=combiner),
+                                impl=impl)
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                    atol=1e-5, rtol=1e-5,
                                    err_msg=f"impl={impl}")
+
+
+# ---------------------------------------------------------------------------
+# plan API: loose-kwarg deprecation shim + plan/kwarg exclusivity
+# ---------------------------------------------------------------------------
+def test_loose_kwargs_warn_once_and_match_plan(monkeypatch):
+    """ops loose kwargs still work (warn-once shim) and equal the plan form."""
+    monkeypatch.setattr(ops, "_LEGACY_KWARGS_WARNED", False)
+    pool, idx, _ = _inputs()
+    with pytest.warns(DeprecationWarning, match="plan=EmbeddingPlan"):
+        legacy = ops.fused_embedding_bag(pool, idx, offsets=OFFSETS,
+                                         combiner="mean")
+    planned = ops.fused_embedding_bag(pool, idx, plan=_plan("mean"))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(planned))
+    # warn-once: the second legacy call is silent
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        ops.fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="mean")
+
+
+def test_bare_ops_call_does_not_warn(monkeypatch):
+    """A call with no loose kwargs gets the default plan silently."""
+    monkeypatch.setattr(ops, "_LEGACY_KWARGS_WARNED", False)
+    key = jax.random.PRNGKey(5)
+    table = jax.random.normal(key, (30, 8))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (5, 3), 0, 30)
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        ops.embedding_bag(table, idx)
+    assert not ops._LEGACY_KWARGS_WARNED
+
+
+def test_plan_and_loose_kwargs_are_exclusive():
+    pool, idx, _ = _inputs()
+    with pytest.raises(AssertionError, match="inside plan="):
+        ops.fused_embedding_bag(pool, idx, plan=_plan(), combiner="sum")
+
+
+def test_legacy_module_warns_deprecation(monkeypatch):
+    monkeypatch.setattr(legacy_eb, "_DEPRECATION_WARNED", False)
+    key = jax.random.PRNGKey(6)
+    table = jax.random.normal(key, (20, 8))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (4, 3), 0, 20)
+    with pytest.warns(DeprecationWarning, match="ops.embedding_bag"):
+        legacy_eb.embedding_bag(table, idx)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +277,7 @@ def test_max_pooling_adversarial_very_negative_rows():
     out_legacy = legacy_eb.embedding_bag(table, idx, combiner="max",
                                          interpret=True)
     np.testing.assert_allclose(np.asarray(out_legacy), np.asarray(expect))
-    out_fused = fused_embedding_bag(table, idx[:, None, :], offsets=(0,),
-                                    combiner="max", method="interpret")
+    out_fused = fused_embedding_bag(
+        table, idx[:, None, :], method="interpret",
+        plan=EmbeddingPlan(offsets=(0,), combiner="max"))
     np.testing.assert_allclose(np.asarray(out_fused[:, 0]), np.asarray(expect))

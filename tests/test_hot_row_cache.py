@@ -28,7 +28,7 @@ from repro.kernels.fused_embedding import (cache_slot_offsets,
                                            fused_embedding_bag, hot_row_ids,
                                            table_offsets)
 from repro.models import dlrm
-from repro.sharding.policy import (balanced_vocab_ranges,
+from repro.sharding.policy import (EmbeddingPlan, balanced_vocab_ranges,
                                    frequency_permutation, pack_hot_ranges,
                                    placement_imbalance)
 
@@ -37,6 +37,11 @@ jax.config.update("jax_platform_name", "cpu")
 ROWS_PER_TABLE = (64, 40, 96, 24)
 OFFSETS = table_offsets(ROWS_PER_TABLE)
 TABLE_HOT = (16, 8, 24, 6)
+
+
+def _plan(combiner="sum", *, block_b=8, table_hot=None):
+    return EmbeddingPlan(offsets=OFFSETS, combiner=combiner,
+                         block_b=block_b, table_hot=table_hot)
 
 
 def _stream(B=13, H=4, D=16, seed=0, alpha=0.0):
@@ -60,33 +65,32 @@ def _stream(B=13, H=4, D=16, seed=0, alpha=0.0):
 def test_cache_bitmatches_xla_fallback(combiner, weighted, alpha):
     pool, idx, w = _stream(alpha=alpha)
     weights = w if weighted else None
-    out_c = fused_embedding_bag(pool, idx, weights, offsets=OFFSETS,
-                                combiner=combiner, method="interpret",
-                                block_b=4, table_hot=TABLE_HOT)
-    out_x = fused_embedding_bag(pool, idx, weights, offsets=OFFSETS,
-                                combiner=combiner, method="xla")
+    out_c = fused_embedding_bag(
+        pool, idx, weights, method="interpret",
+        plan=_plan(combiner, block_b=4, table_hot=TABLE_HOT))
+    out_x = fused_embedding_bag(pool, idx, weights, method="xla",
+                                plan=_plan(combiner))
     np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_x))
 
 
 def test_cache_off_equals_cache_on_interpret():
     """The cache only re-routes reads: outputs are bit-identical."""
     pool, idx, _ = _stream(alpha=1.05)
-    out_nc = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                 method="interpret", block_b=4)
-    out_c = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                method="interpret", block_b=4,
-                                table_hot=TABLE_HOT)
+    out_nc = fused_embedding_bag(pool, idx, method="interpret",
+                                 plan=_plan(block_b=4))
+    out_c = fused_embedding_bag(
+        pool, idx, method="interpret",
+        plan=_plan(block_b=4, table_hot=TABLE_HOT))
     np.testing.assert_array_equal(np.asarray(out_nc), np.asarray(out_c))
 
 
 def test_cache_partial_tail_block():
     """B not divisible by block_b: host-side padding covers the tail."""
     pool, idx, _ = _stream(B=11, alpha=1.05)
-    out_c = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                method="interpret", block_b=4,
-                                table_hot=TABLE_HOT)
-    out_x = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                method="xla")
+    out_c = fused_embedding_bag(
+        pool, idx, method="interpret",
+        plan=_plan(block_b=4, table_hot=TABLE_HOT))
+    out_x = fused_embedding_bag(pool, idx, method="xla", plan=_plan())
     np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_x))
 
 
@@ -94,12 +98,11 @@ def test_all_hot_and_none_hot_extremes():
     pool, idx, _ = _stream(alpha=1.05)
     all_hot = ROWS_PER_TABLE            # whole pool cached
     none_hot = (0,) * len(ROWS_PER_TABLE)
-    out_x = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                method="xla")
+    out_x = fused_embedding_bag(pool, idx, method="xla", plan=_plan())
     for hot in (all_hot, none_hot):
-        out = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                  method="interpret", block_b=4,
-                                  table_hot=hot)
+        out = fused_embedding_bag(
+            pool, idx, method="interpret",
+            plan=_plan(block_b=4, table_hot=hot))
         np.testing.assert_array_equal(np.asarray(out), np.asarray(out_x))
 
 
@@ -113,9 +116,9 @@ def test_grads_through_cached_rows(combiner, weighted):
 
     def loss(method, hot):
         def f(p, wt):
-            out = fused_embedding_bag(p, idx, wt, offsets=OFFSETS,
-                                      combiner=combiner, method=method,
-                                      block_b=4, table_hot=hot)
+            out = fused_embedding_bag(
+                p, idx, wt, method=method,
+                plan=_plan(combiner, block_b=4, table_hot=hot))
             return jnp.sum(jnp.sin(out))
         return f
 
@@ -156,10 +159,9 @@ def test_encode_hot_indices():
 
 def test_xla_path_ignores_cache_bit_identically():
     pool, idx, _ = _stream(alpha=1.05)
-    out_a = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                method="xla")
-    out_b = fused_embedding_bag(pool, idx, offsets=OFFSETS, combiner="sum",
-                                method="xla", table_hot=TABLE_HOT)
+    out_a = fused_embedding_bag(pool, idx, method="xla", plan=_plan())
+    out_b = fused_embedding_bag(pool, idx, method="xla",
+                                plan=_plan(table_hot=TABLE_HOT))
     np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
 
 
@@ -280,7 +282,7 @@ def test_dlrm_threads_table_hot(monkeypatch):
     real = ops.fused_embedding_bag
 
     def spy(*args, **kwargs):
-        seen.append(kwargs.get("table_hot"))
+        seen.append(kwargs["plan"].table_hot)
         return real(*args, **kwargs)
 
     monkeypatch.setattr(ops, "fused_embedding_bag", spy)

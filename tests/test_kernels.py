@@ -7,11 +7,18 @@ import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
-from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.flash_attention import flash_attention
 from repro.models.attention import chunked_attention
+from repro.sharding.policy import EmbeddingPlan
+
+
+def embedding_bag(table, idx, w=None, *, combiner="sum", interpret=False):
+    """Single-table bag through the public plan API (ex-legacy module)."""
+    return ops.embedding_bag(table, idx, w,
+                             plan=EmbeddingPlan(combiner=combiner),
+                             impl="interpret" if interpret else None)
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -28,7 +28,7 @@ from repro.data.synthetic import criteo_batch
 from repro.kernels.fused_embedding import (fused_embedding_bag, table_offsets,
                                            translate_rows, translate_rows_np)
 from repro.models.dlrm import dlrm_loss
-from repro.sharding.policy import (balanced_vocab_ranges,
+from repro.sharding.policy import (EmbeddingPlan, balanced_vocab_ranges,
                                    padded_layout_for_ranges,
                                    uniform_vocab_ranges)
 from repro.train import elastic, optim, replan, trainer
@@ -144,12 +144,12 @@ def test_padded_forward_bitmatches_flat(combiner, weighted, method, hot):
     pool, idx, w, lay = _stream()
     weights = w if weighted else None
     ppool = lay.pad_rows(pool).reshape(lay.padded_rows, -1)
-    out_flat = fused_embedding_bag(pool, idx, weights, offsets=OFFSETS,
-                                   combiner=combiner, method=method,
-                                   block_b=4, table_hot=hot)
-    out_pad = fused_embedding_bag(ppool, idx, weights, offsets=OFFSETS,
-                                  combiner=combiner, method=method,
-                                  block_b=4, table_hot=hot, layout=lay)
+    plan = EmbeddingPlan(offsets=OFFSETS, combiner=combiner, block_b=4,
+                         table_hot=hot)
+    out_flat = fused_embedding_bag(pool, idx, weights, method=method,
+                                   plan=plan)
+    out_pad = fused_embedding_bag(ppool, idx, weights, method=method,
+                                  plan=plan.with_replan(hot, lay))
     np.testing.assert_array_equal(np.asarray(out_flat), np.asarray(out_pad))
 
 
@@ -158,14 +158,15 @@ def test_padded_backward_bitmatches_flat_and_zeroes_padding(combiner):
     pool, idx, w, lay = _stream(seed=3)
     D = pool.shape[1]
 
+    plan = EmbeddingPlan(offsets=OFFSETS, combiner=combiner)
+
     def loss_flat(p):
-        return jnp.sum(fused_embedding_bag(p, idx, w, offsets=OFFSETS,
-                                           combiner=combiner) * 1.3)
+        return jnp.sum(fused_embedding_bag(p, idx, w, plan=plan) * 1.3)
 
     def loss_pad(p3):
         return jnp.sum(fused_embedding_bag(
-            p3.reshape(-1, D), idx, w, offsets=OFFSETS, combiner=combiner,
-            layout=lay) * 1.3)
+            p3.reshape(-1, D), idx, w,
+            plan=plan.with_replan(None, lay)) * 1.3)
 
     g_flat = jax.grad(loss_flat)(pool)
     g_pad = jax.grad(loss_pad)(lay.pad_rows(pool))

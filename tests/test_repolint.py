@@ -61,7 +61,9 @@ def test_src_scripts_benchmarks_are_clean():
     ("bad_purity.py", "jax-purity"),
     ("bad_unseeded_random.py", "unseeded-random"),
     ("bad_pallas_vmem.py", "pallas-vmem"),
+    ("bad_pallas_alias.py", "pallas-vmem"),
     ("bad_pallas_dma.py", "pallas-dma"),
+    ("bad_pallas_dma_slot.py", "pallas-dma"),
     ("bad_threadsafety.py", "thread-safety"),
     ("bad_silent_except.py", "silent-except"),
 ])
@@ -80,6 +82,23 @@ def test_bad_idspace_catches_all_three_shapes():
     assert "without a sanctioned translator" in messages
     assert "mixes" in messages
     assert "double translation" in messages
+
+
+def test_pallas_alias_catches_both_shapes():
+    findings, _ = run_paths([_fixture("bad_pallas_alias.py")])
+    messages = " | ".join(f.message for f in findings)
+    assert "straddles memory spaces" in messages
+    assert "but only 2 outputs exist" in messages
+
+
+def test_pallas_dma_slot_is_precise():
+    findings, _ = run_paths([_fixture("bad_pallas_dma_slot.py")])
+    slot = [f for f in findings if f.rule == "pallas-dma"]
+    messages = " | ".join(f.message for f in slot)
+    assert "SemaphoreType.DMA((2,))" in messages
+    assert "sem.at[2]" in messages
+    # the in-bounds sem.at[0] uses must NOT be flagged
+    assert "sem.at[0]" not in messages
 
 
 def test_threadsafety_catches_both_hazards():
