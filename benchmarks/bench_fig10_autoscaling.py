@@ -9,7 +9,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 
-from benchmarks.common import Row
+from benchmarks.common import Row, fast_mode
 import repro.sim.cluster as C
 from repro.sim.workload import generate_jobs
 
@@ -17,7 +17,7 @@ from repro.sim.workload import generate_jobs
 def run(seed: int = 5) -> List[Row]:
     rows: List[Row] = []
     jobs = generate_jobs(1, seed=seed, mean_msamples=500.0)  # long job
-    marks = [6, 12, 18, 24, 30]
+    marks = [6, 12] if fast_mode() else [6, 12, 18, 24, 30]
     curves: Dict[str, Dict[int, float]] = {}
     for name in ["dlrover_rm", "es", "optimus"]:
         sim = C.CloudSim(name, total_cpu=8192, total_mem_gb=65536, seed=7,
@@ -32,7 +32,7 @@ def run(seed: int = 5) -> List[Row]:
 
         C.CloudSim._throughput = patched
         try:
-            sim.run(jobs, horizon_s=40 * 60)
+            sim.run(jobs, horizon_s=(15 if fast_mode() else 40) * 60)
         finally:
             C.CloudSim._throughput = orig
         curves[name] = {}

@@ -17,7 +17,7 @@ from typing import List
 import jax
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, fast_mode
 from repro.core.migration import MigrationPlan
 from repro.sim.cluster import CloudSim, TIMINGS
 from repro.sim.workload import generate_jobs
@@ -89,8 +89,9 @@ def run() -> List[Row]:
 
     # --- REAL flash-checkpoint timing ----------------------------------------
     from repro.core.flash_checkpoint import FlashCheckpoint
+    n_arrays = 8 if fast_mode() else 40
     state = {"w": [jax.random.normal(jax.random.PRNGKey(i), (512, 512))
-                   for i in range(40)]}          # ~40 MB
+                   for i in range(n_arrays)]}    # ~40 MB (8 MB in fast mode)
     with tempfile.TemporaryDirectory() as d:
         ck = FlashCheckpoint(d, async_persist=False)
         ck.save(state, 1)

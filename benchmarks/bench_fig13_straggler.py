@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row
+from benchmarks.common import Row, fast_mode
 from repro.core.sharding_service import ShardingService
 from repro.sim.cluster import CloudSim, TIMINGS
 from repro.sim.workload import generate_jobs
@@ -60,7 +60,8 @@ def run() -> List[Row]:
     rows.append(("reduction_vs_traditional", 1 - jd / jt, "paper: 0.37"))
 
     # --- real shard-queue rebalancing ----------------------------------------
-    svc = ShardingService(total_samples=4096, shard_size=512, min_shard=64,
+    svc = ShardingService(total_samples=1024 if fast_mode() else 4096,
+                          shard_size=512, min_shard=64,
                           heartbeat_timeout=10.0)
     clock = [0.0]
 

@@ -12,12 +12,14 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, fast_mode
 from repro.sim.cluster import CloudSim
 from repro.sim.workload import generate_jobs
 
 
 def run(n_jobs: int = 24, horizon_h: float = 20.0, seed: int = 11) -> List[Row]:
+    if fast_mode():
+        n_jobs, horizon_h = 10, 12.0
     rows: List[Row] = []
     jobs = generate_jobs(n_jobs, seed=seed, arrival_rate_per_h=40,
                          mean_msamples=40.0)

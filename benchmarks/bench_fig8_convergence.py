@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, fast_mode
 from repro.configs.dlrm_models import DCN, WIDE_DEEP, XDEEPFM, reduced_dlrm
 from repro.core.sharding_service import ShardingService
 from repro.data.pipeline import ShardDataLoader
@@ -73,7 +73,8 @@ def _train(cfg, elastic: bool, seed: int = 0):
 
 def run() -> List[Row]:
     rows: List[Row] = []
-    for base in (WIDE_DEEP, XDEEPFM, DCN):
+    models = (WIDE_DEEP,) if fast_mode() else (WIDE_DEEP, XDEEPFM, DCN)
+    for base in models:
         cfg = reduced_dlrm(base)
         l_static, auc_s, _ = _train(cfg, elastic=False)
         l_elastic, auc_e, svc = _train(cfg, elastic=True)

@@ -5,11 +5,20 @@ Every bench module exposes ``run() -> List[Tuple[str, float, str]]`` rows of
 """
 from __future__ import annotations
 
+import os
 import time
 from contextlib import contextmanager
 from typing import List, Tuple
 
 Row = Tuple[str, float, str]
+
+
+def fast_mode() -> bool:
+    """True when the runner's ``--fast`` flag (``REPRO_BENCH_FAST=1``) is on.
+
+    Bench modules must call this inside ``run()`` — not at import time — so
+    the flag is honored regardless of import order."""
+    return os.environ.get("REPRO_BENCH_FAST", "") == "1"
 
 
 @contextmanager

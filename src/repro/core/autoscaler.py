@@ -11,6 +11,7 @@ generation, and cluster-level weighted greedy selection.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Sequence, Tuple
 
@@ -60,13 +61,27 @@ class PlanCandidate:
 
 @dataclass
 class JobState:
-    """What the cluster brain knows about one running job."""
+    """What the cluster brain knows about one running job.
+
+    ``degradation`` is the stage-3 penalty signal Φ_sp (Eqn 14): an
+    exponentially-decayed count of recent instability events (failures,
+    stragglers, hot PSes, OOMs) reported back by the supervisor/simulator.
+    Degraded jobs get a larger WG weight so the weighted greedy rescues
+    them first — the deliverable-guarantee feedback loop of §4.3.
+    """
     job_id: str
     statics: JobStatics
     current: JobResources
     model: PerfModel
     remaining_samples: float
     priority_rho: float = 2.5
+    degradation: float = 0.0
+
+
+def job_seed(job_id: str) -> int:
+    """Process-stable per-job RNG seed (``hash(str)`` is salted per process,
+    which silently broke cross-run reproducibility of the NSGA-II search)."""
+    return zlib.crc32(job_id.encode()) % 2**31
 
 
 BOUNDS = dict(w=(1, 32), p=(1, 16), cpu_w=(1, 32), cpu_p=(1, 32))
@@ -82,8 +97,17 @@ def generate_candidates(job: JobState, *, prices: Prices = Prices(),
                         overheads: ScalingOverheads = ScalingOverheads(),
                         horizon_s: float = 600.0,
                         pop_size: int = 40, generations: int = 25,
-                        seed: int = 0) -> List[PlanCandidate]:
-    """Job-level NSGA-II over (RC, 1/TG) — the Pareto frontier of Eqn 9."""
+                        seed: int = 0,
+                        trust_factor: float = 0.0) -> List[PlanCandidate]:
+    """Job-level NSGA-II over (RC, 1/TG) — the Pareto frontier of Eqn 9.
+
+    ``trust_factor`` > 1 restricts the search box to a multiplicative trust
+    region around the current allocation (each variable within
+    ``[v/trust_factor, v·trust_factor]``): the NNLS model is fitted on
+    observations near the operating point, so a plan far outside it rides on
+    pure extrapolation — gradual re-centered steps are how the controller
+    stays inside the region the model has earned.
+    """
     base_thp = job.model.throughput(job.current, job.statics)
 
     def objectives(x: np.ndarray) -> Tuple[float, float]:
@@ -100,6 +124,9 @@ def generate_candidates(job: JobState, *, prices: Prices = Prices(),
     bounds = [BOUNDS["w"], BOUNDS["p"], BOUNDS["cpu_w"], BOUNDS["cpu_p"]]
     x0 = np.array([job.current.w, job.current.p, job.current.cpu_w,
                    job.current.cpu_p], float)
+    if trust_factor > 1.0:
+        bounds = [(max(lo, v / trust_factor), min(hi, v * trust_factor))
+                  for (lo, hi), v in zip(bounds, x0)]
     seeds = [x0, x0 * 2, x0 * 0.5,
              x0 * np.array([2, 1, 1, 1]), x0 * np.array([1, 2, 1, 1]),
              x0 * np.array([1, 1, 2, 1]), x0 * np.array([1, 1, 1, 2]),
@@ -117,9 +144,16 @@ def generate_candidates(job: JobState, *, prices: Prices = Prices(),
 
 
 def weight_wg(job: JobState, thp: float, *, eps: float = 1e-6) -> float:
-    """Eqn 14: prioritize shorter-remaining jobs (ρ=2.5 at AntGroup)."""
+    """Eqn 14: prioritize shorter-remaining jobs (ρ=2.5 at AntGroup).
+
+    The stage-3 degradation penalty Φ_sp enters multiplicatively: a job that
+    recently lost pods / hit stragglers / OOMed has its weight boosted by
+    ``1 + degradation`` so capacity flows to rescuing it before it misses
+    its deliverable deadline.
+    """
     remaining_time = job.remaining_samples / max(thp, 1e-9)
-    return 1.0 / ((remaining_time + eps) ** job.priority_rho)
+    boost = 1.0 + max(job.degradation, 0.0)
+    return boost / ((remaining_time + eps) ** job.priority_rho)
 
 
 @dataclass
@@ -128,14 +162,35 @@ class ClusterCapacity:
     total_mem_gb: float
 
 
+def predicted_idle_frac(job: JobState, r: JobResources) -> float:
+    """Model-predicted fraction of a plan's CPU that would sit idle.
+
+    Busy fractions follow the Eqn 2–5 decomposition: workers are busy for the
+    T_grad share of an iteration, PSes for the T_upd + T_emb share. What's
+    left is reserved-but-idle CPU — the §2.2 waste the utilization claim of
+    Fig 14 is about."""
+    br = job.model.term_breakdown(r, job.statics)
+    t_iter = max(sum(br.values()), 1e-9)
+    fw = min(br["grad"] / t_iter, 1.0)
+    fp = min((br["upd"] + br["emb"]) / t_iter, 1.0)
+    total = max(r.total_cpu(), 1e-9)
+    busy = (r.w * r.cpu_w * fw + r.p * r.cpu_p * fp) / total
+    return float(min(max(1.0 - busy, 0.0), 1.0))
+
+
 def weighted_greedy_select(jobs: Sequence[JobState],
                            candidates: Dict[str, List[PlanCandidate]],
-                           capacity: ClusterCapacity
+                           capacity: ClusterCapacity, *,
+                           idle_penalty: float = 0.0
                            ) -> Dict[str, JobResources]:
     """Eqns 12–13: pick ≤1 plan per job maximizing Σ RE·WG within capacity.
 
     Greedy by score density; jobs keep their current allocation when no
     candidate fits (current allocations are charged against capacity first).
+    ``idle_penalty`` > 0 inflates a candidate's effective resource cost by
+    ``1 + idle_penalty · predicted_idle_frac`` — money prices alone make idle
+    PS cores look cheap, so a utilization-aware operator charges reservations
+    the model predicts will not be used.
     """
     jmap = {j.job_id: j for j in jobs}
     used_cpu = sum(j.current.total_cpu() for j in jobs)
@@ -147,7 +202,10 @@ def weighted_greedy_select(jobs: Sequence[JobState],
         for c in cands:
             if c.tg <= 0:
                 continue
-            scored.append((c.re * weight_wg(job, c.thp), c))
+            re = c.re
+            if idle_penalty > 0.0:
+                re /= 1.0 + idle_penalty * predicted_idle_frac(job, c.resources)
+            scored.append((re * weight_wg(job, c.thp), c))
     scored.sort(key=lambda t: -t[0])
 
     plans: Dict[str, JobResources] = {}
@@ -189,6 +247,6 @@ def list_scalers() -> List[str]:
 def dlrover_rm_scaler(jobs: Sequence[JobState],
                       capacity: ClusterCapacity) -> Dict[str, JobResources]:
     """Stage-2 auto-scaling: per-job NSGA-II + cluster weighted greedy."""
-    candidates = {j.job_id: generate_candidates(j, seed=hash(j.job_id) % 2**31)
+    candidates = {j.job_id: generate_candidates(j, seed=job_seed(j.job_id))
                   for j in jobs if j.model.fitted}
     return weighted_greedy_select(jobs, candidates, capacity)

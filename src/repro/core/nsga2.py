@@ -70,6 +70,8 @@ def crowding_distance(front: List[Individual]) -> None:
 
 
 def _tournament(pop: List[Individual], rng) -> Individual:
+    if len(pop) == 1:                      # degenerate population
+        return pop[0]
     a, b = rng.choice(len(pop), 2, replace=False)
     pa, pb = pop[a], pop[b]
     if pa.rank != pb.rank:
@@ -111,7 +113,13 @@ def nsga2(objectives: Callable[[np.ndarray], Sequence[float]],
 
     def make(x) -> Individual:
         x = np.clip(np.round(x) if integer else x, lo, hi)
-        return Individual(x=x, f=np.asarray(objectives(x), float))
+        f = np.asarray(objectives(x), float)
+        if not np.all(np.isfinite(f)):
+            raise ValueError(
+                f"objectives returned non-finite values {f.tolist()} at "
+                f"x={x.tolist()}; NSGA-II dominance is undefined for NaN/inf "
+                "— clamp or penalize inside the objective function instead")
+        return Individual(x=x, f=f)
 
     pop = [make(lo + rng.random(len(bounds)) * (hi - lo)) for _ in range(pop_size)]
     for i, x0 in enumerate(init or []):

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -81,6 +81,16 @@ class SimResult:
     ts_used_cpu: List[float] = field(default_factory=list)
     ts_alloc_mem: List[float] = field(default_factory=list)
     ts_used_mem: List[float] = field(default_factory=list)
+    ts_capacity_cpu: List[float] = field(default_factory=list)
+    #: chronological (time_s, job_id, event) triples; see :meth:`event_log`
+    events: List[Tuple[float, str, str]] = field(default_factory=list)
+
+    def event_log(self) -> str:
+        """Canonical one-line-per-event serialization; byte-identical for
+        identical ``(scheduler seed, failure_seed, workload, config)`` —
+        the determinism contract tests and benches pin."""
+        return "\n".join(f"{t:.1f} {jid} {kind}"
+                         for t, jid, kind in self.events)
 
     # ----------------------------------------------------------------- stats
     def jcr(self) -> float:
@@ -122,7 +132,12 @@ class CloudSim:
     model agrees with the real system's recovery costs.
     ``straggler_rebalance_s`` / ``unmitigated_s`` are the previously
     hardcoded recovery horizons of dynamic-sharding rebalance and
-    no-intervention strategies."""
+    no-intervention strategies. ``capacity_profile`` makes the usable
+    cluster capacity time-varying (e.g. ``repro.sim.trace.CapacityWave``):
+    called as ``profile(now) -> (total_cpu, total_mem_gb)`` each step, it
+    moves the shared ``ClusterCapacity`` the scheduler also sees — already
+    admitted jobs keep running through a dip, but admission and scale-up
+    decisions are bounded by the shrunken envelope."""
 
     def __init__(self, scheduler_name: str, *, total_cpu: float = 2048.0,
                  total_mem_gb: float = 16384.0, seed: int = 0, dt: float = 15.0,
@@ -134,9 +149,12 @@ class CloudSim:
                  failure_seed: Optional[int] = None,
                  timings: MigrationTimings = TIMINGS,
                  straggler_rebalance_s: float = 60.0,
-                 unmitigated_s: float = 1800.0):
+                 unmitigated_s: float = 1800.0,
+                 capacity_profile: Optional[
+                     Callable[[float], Tuple[float, float]]] = None):
         from repro.core.autoscaler import ClusterCapacity
         self.capacity = ClusterCapacity(total_cpu, total_mem_gb)
+        self.capacity_profile = capacity_profile
         self.scheduler = make_scheduler(scheduler_name, self.capacity, seed)
         self.traits = self.scheduler.traits
         self.failure_seed = (seed + 1) if failure_seed is None else failure_seed
@@ -227,11 +245,21 @@ class CloudSim:
             view = JobRuntimeView(job, r, 0.0, [])
             running[job.job_id] = _Running(job, view, rec, r)
             result.records.append(rec)
+            result.events.append((now, job.job_id, "start"))
             used_cpu_alloc += cpu
             used_mem_alloc += mem
             return True
 
+        def emit(job_id: str, kind: str) -> None:
+            result.events.append((now, job_id, kind))
+            self.scheduler.on_event(job_id, kind, now)
+
         while now < horizon_s and (ai < len(arrivals) or pending or running):
+            # --- time-varying capacity (trace replay) ---------------------
+            if self.capacity_profile is not None:
+                cap_cpu, cap_mem = self.capacity_profile(now)
+                self.capacity.total_cpu = cap_cpu
+                self.capacity.total_mem_gb = cap_mem
             # --- arrivals -> pending queue --------------------------------
             while ai < len(arrivals) and arrivals[ai].arrival_s <= now:
                 pending.append(arrivals[ai])
@@ -301,6 +329,7 @@ class CloudSim:
                             rj.view.resources = rj.resources
                 if rj.mem_used_gb() > rj.mem_capacity_gb():
                     rj.record.ooms += 1
+                    emit(job_id, "oom")
                     # restart with doubled PS memory from last checkpoint
                     new_mem_p = rj.resources.mem_p * 2
                     dmem = (new_mem_p - rj.resources.mem_p) * rj.resources.p
@@ -319,6 +348,7 @@ class CloudSim:
                     p_fail = pods * self.pod_failure_rate * self.dt / 86400.0
                     if self.rng.random() < p_fail:
                         rj.record.failures += 1
+                        emit(job_id, "failure")
                         if self.traits.dynamic_sharding:
                             # shard requeued; worker replaced in background
                             rj.capacity_loss_until = now + self.timings.provision_s
@@ -331,6 +361,7 @@ class CloudSim:
                     p_str = rj.resources.w * self.straggler_rate * self.dt / 86400.0
                     if now >= rj.straggler_until and self.rng.random() < p_str:
                         rj.record.stragglers += 1
+                        emit(job_id, "straggler")
                         if self.traits.dynamic_sharding:
                             rj.straggler_until = now + self.straggler_rebalance_s  # rebalanced
                         elif self.traits.elastic:
@@ -345,6 +376,7 @@ class CloudSim:
                     p_hot = rj.resources.p * self.hotps_rate * self.dt / 86400.0
                     if now >= rj.hotps_until and self.rng.random() < p_hot:
                         rj.record.hot_pses += 1
+                        emit(job_id, "hot_ps")
                         if self.traits.seamless_migration:
                             # provisioning overlaps training; flash sync at end
                             rj.hotps_until = now + self.timings.provision_s
@@ -364,6 +396,7 @@ class CloudSim:
                 if rj.samples_done >= rj.job.total_samples:
                     rj.record.completed = True
                     rj.record.finished_s = now
+                    result.events.append((now, job_id, "complete"))
                     thp_final, _, _ = self._throughput(rj, now)
                     self.scheduler.on_complete(rj.view, thp_final)
                     used_cpu_alloc -= rj.resources.total_cpu()
@@ -376,7 +409,7 @@ class CloudSim:
                 # plan are eligible (no decisions on stale/blocked state)
                 views = [rj.view for rj in running.values()
                          if rj.view.obs_since_plan >= 5]
-                plans = self.scheduler.decide(views) if views else {}
+                plans = self.scheduler.decide(views, now) if views else {}
                 for jid, plan in plans.items():
                     rj = running.get(jid)
                     if rj is None or rj.pending_plan is not None:
@@ -386,6 +419,7 @@ class CloudSim:
                     if used_cpu_alloc + dcpu > self.capacity.total_cpu or \
                        used_mem_alloc + dmem > self.capacity.total_mem_gb:
                         continue
+                    result.events.append((now, jid, "plan"))
                     if self.traits.seamless_migration:
                         rj.pending_plan = plan
                         rj.plan_apply_at = now + self.timings.provision_s
@@ -420,6 +454,7 @@ class CloudSim:
                 result.ts_used_cpu.append(used_cpu)
                 result.ts_alloc_mem.append(used_mem_alloc)
                 result.ts_used_mem.append(used_mem)
+                result.ts_capacity_cpu.append(self.capacity.total_cpu)
                 next_sample = now + sample_every_s
 
             now += self.dt

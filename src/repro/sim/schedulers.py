@@ -17,12 +17,10 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.autoscaler import (
-    ClusterCapacity, JobState, PlanCandidate, generate_candidates,
-    weighted_greedy_select,
-)
+from repro.core.autoscaler import ClusterCapacity, JobState
+from repro.core.brain import ClusterBrain
 from repro.core.perf_model import JobResources, JobStatics, PerfModel
-from repro.core.warm_start import ConfigDB, ConfigRecord, warm_start
+from repro.core.warm_start import ConfigDB, ConfigRecord
 from repro.sim.workload import SimJob
 
 
@@ -67,10 +65,17 @@ class Scheduler:
         return job.user_request
 
     # -------------------------------------------------------------- periodic
-    def decide(self, views: Sequence[JobRuntimeView]) -> Dict[str, JobResources]:
+    def decide(self, views: Sequence[JobRuntimeView], now: float = 0.0
+               ) -> Dict[str, JobResources]:
         return {}
 
     # -------------------------------------------------------------- events
+    def on_event(self, job_id: str, kind: str, now: float) -> None:
+        """Instability signal (failure/straggler/hot_ps/oom) from the engine.
+
+        Baselines ignore it; DLRover-RM feeds it to the brain's stage-3
+        degradation ledger so the next ``decide`` prioritizes the victim."""
+
     def on_complete(self, view: JobRuntimeView, throughput: float) -> None:
         self.config_db.add(ConfigRecord(
             meta=view.job.meta, final_config=view.resources,
@@ -89,23 +94,41 @@ class StaticTuned(Scheduler):
 
 
 class DLRoverRM(Scheduler):
+    """The paper's system, driven end-to-end by the real ``ClusterBrain``:
+    the simulator exercises stage 1 (similarity warm start + kind-model
+    refinement) on admission, stage 2 (NSGA-II + weighted greedy) every
+    decision interval, and stage 3 (degradation feedback into the WG
+    weights) through ``on_event`` — the same controller object the
+    launcher-side ``JobMaster`` path uses."""
+
     traits = SchedulerTraits(
         name="dlrover_rm", elastic=True, warm_start=True, dynamic_sharding=True,
         seamless_migration=True, flash_ckpt=True, oom_prevention=True)
 
-    def initial_allocation(self, job: SimJob) -> JobResources:
-        # stage 1: warm start from historical similar jobs
-        return warm_start(job.meta, self.config_db,
-                          default=JobResources(w=2, p=1, cpu_w=4, cpu_p=4))
-
     def __init__(self, capacity: ClusterCapacity, seed: int = 0):
         super().__init__(capacity, seed)
-        self._round = 0
-        self._optimized_at: Dict[str, int] = {}
-        self._cached: Dict[str, List[PlanCandidate]] = {}
+        self.brain = ClusterBrain(capacity, idle_penalty=1.0, trust_factor=2.0)
+        # one config DB: completions recorded by the engine feed stage 1
+        self.config_db = self.brain.config_db
 
-    def decide(self, views: Sequence[JobRuntimeView]) -> Dict[str, JobResources]:
-        self._round += 1
+    def initial_allocation(self, job: SimJob) -> JobResources:
+        # stage 1: warm start from history, refined by the kind-level model.
+        # Cold-start default matches the baselines' (fair comparison): the
+        # advantage must come from the three-stage loop, not a better guess.
+        return self.brain.allocate(
+            job.meta, job.statics,
+            default=JobResources(w=4, p=2, cpu_w=8, cpu_p=8))
+
+    def on_event(self, job_id: str, kind: str, now: float) -> None:
+        self.brain.report_degradation(job_id, kind, now)      # stage 3
+
+    def on_complete(self, view: JobRuntimeView, throughput: float) -> None:
+        self.brain.record_history(
+            view.job.meta, view.job.statics, view.observations,
+            final_config=view.resources, throughput=throughput)
+
+    def decide(self, views: Sequence[JobRuntimeView], now: float = 0.0
+               ) -> Dict[str, JobResources]:
         jobs: List[JobState] = []
         for v in views:
             v.refit()
@@ -117,18 +140,7 @@ class DLRoverRM(Scheduler):
                 remaining_samples=max(v.job.total_samples - v.samples_done, 0.0)))
         if not jobs:
             return {}
-        candidates: Dict[str, List[PlanCandidate]] = {}
-        for j in jobs:
-            # stagger expensive NSGA-II runs: each job re-optimized every 2nd
-            # round (or when never optimized); cached Pareto fronts otherwise
-            last = self._optimized_at.get(j.job_id, -10)
-            if self._round - last >= 2:
-                self._cached[j.job_id] = generate_candidates(
-                    j, seed=abs(hash(j.job_id)) % 2**31,
-                    pop_size=24, generations=12)
-                self._optimized_at[j.job_id] = self._round
-            candidates[j.job_id] = self._cached.get(j.job_id, [])
-        plans = weighted_greedy_select(jobs, candidates, self.capacity)
+        plans = self.brain.adjust(jobs, now=now)              # stage 2
         # memory right-sizing: PS memory tracks observed usage + headroom
         vmap = {v.job.job_id: v for v in views}
         for jid, plan in list(plans.items()):
@@ -161,7 +173,8 @@ class ElasticScheduler(Scheduler):
     def initial_allocation(self, job: SimJob) -> JobResources:
         return _BASELINE_DEFAULT                # sane scheduler default
 
-    def decide(self, views: Sequence[JobRuntimeView]) -> Dict[str, JobResources]:
+    def decide(self, views: Sequence[JobRuntimeView], now: float = 0.0
+               ) -> Dict[str, JobResources]:
         plans: Dict[str, JobResources] = {}
         for v in views:
             if not v.observations:
@@ -204,7 +217,8 @@ class Optimus(Scheduler):
     def initial_allocation(self, job: SimJob) -> JobResources:
         return _BASELINE_DEFAULT                # sane scheduler default
 
-    def decide(self, views: Sequence[JobRuntimeView]) -> Dict[str, JobResources]:
+    def decide(self, views: Sequence[JobRuntimeView], now: float = 0.0
+               ) -> Dict[str, JobResources]:
         plans: Dict[str, JobResources] = {}
         for v in views:
             v.refit()

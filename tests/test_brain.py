@@ -1,0 +1,194 @@
+"""ClusterBrain three-stage controller: warm-start refinement, staggered
+NSGA-II caching, right-sizing reclaim, degradation decay, history pooling,
+and the trust-region / idle-penalty operator knobs."""
+import numpy as np
+import pytest
+
+from repro.core.autoscaler import (
+    ClusterCapacity, JobState, generate_candidates, predicted_idle_frac,
+    weighted_greedy_select,
+)
+from repro.core.brain import (
+    DEGRADATION_WEIGHTS, ClusterBrain, reclaim_allocation, refine_allocation,
+)
+from repro.core.perf_model import (
+    JobResources, JobStatics, PerfModel, synthesize_t_iter,
+)
+from repro.core.warm_start import JobMeta
+
+STAT = JobStatics(batch_size=512, model_size=3.2e8, bandwidth=1e9, emb_dim=16)
+ALPHA = [3.48e-3, 2.36e-3, 0.68e-3, 2.45e-5]
+BETA = 2.45e-3
+
+
+def _model(seed=0):
+    rng = np.random.default_rng(seed)
+    obs = []
+    for _ in range(48):
+        r = JobResources(w=int(rng.integers(1, 24)), p=int(rng.integers(1, 12)),
+                         cpu_w=float(rng.integers(1, 32)),
+                         cpu_p=float(rng.integers(1, 32)))
+        obs.append((r, STAT, synthesize_t_iter(r, STAT, ALPHA, BETA)))
+    return PerfModel().fit(obs)
+
+
+def _job(jid="j0", current=None, remaining=5e6, model=None):
+    return JobState(job_id=jid, statics=STAT,
+                    current=current or JobResources(w=4, p=2, cpu_w=8, cpu_p=8),
+                    model=model or _model(),
+                    remaining_samples=remaining)
+
+
+def _capacity(cpu=2048.0, mem=16384.0):
+    return ClusterCapacity(cpu, mem)
+
+
+# ------------------------------------------------------------------ stage 1
+def test_refine_allocation_requires_model_gain():
+    """The grid only overrides the warm start when predicted throughput per
+    dollar improves by the pinned margin; a fitted model on a throughput
+    surface that rewards more worker CPU should move the plan somewhere
+    with no worse predicted efficiency."""
+    model = _model()
+    plan = JobResources(w=2, p=1, cpu_w=2, cpu_p=2)
+    refined = refine_allocation(plan, STAT, model)
+    from repro.core.autoscaler import Prices, resource_cost
+
+    def eff(r):
+        return model.throughput(r, STAT) / resource_cost(r, Prices())
+
+    assert eff(refined) >= eff(plan)
+
+
+def test_allocate_uses_default_before_history():
+    brain = ClusterBrain(_capacity())
+    meta = JobMeta("wide_deep", dense_params=1e6, emb_rows=5e6, emb_dim=16,
+                   batch_size=512, dataset_samples=1e7, user="u0")
+    default = JobResources(w=4, p=2, cpu_w=8, cpu_p=8)
+    assert brain.allocate(meta, STAT, default=default) == default
+
+
+# ------------------------------------------------------------------ stage 2
+def test_adjust_caches_nsga_fronts_between_rounds():
+    """The staggered cadence: a job's Pareto search runs on round 1, is
+    cached on round 2, and re-runs once ``reoptimize_every`` rounds pass."""
+    brain = ClusterBrain(_capacity(), reoptimize_every=2)
+    job = _job()
+    brain.adjust([job])
+    assert brain._optimized_at[job.job_id] == 1
+    brain.adjust([job])
+    assert brain._optimized_at[job.job_id] == 1      # cache hit
+    brain.adjust([job])
+    assert brain._optimized_at[job.job_id] == 3      # cadence reached
+
+
+def test_reclaim_shrinks_overprovisioned_job():
+    """An allocation with grossly over-provisioned PS CPU (the §2.2 idle
+    reservation the greedy will never touch, since shrinking has tg ≤ 0)
+    must be right-sized by the reclaim pass (cost down, predicted thp held).
+    """
+    model = _model()
+    fat = JobResources(w=4, p=4, cpu_w=8.0, cpu_p=32.0)
+    cand = reclaim_allocation(fat, STAT, model, slack=0.03, min_cut=0.15)
+    assert cand is not None
+    from repro.core.autoscaler import Prices, resource_cost
+    assert resource_cost(cand, Prices()) <= 0.85 * resource_cost(fat, Prices())
+    assert model.throughput(cand, STAT) >= 0.97 * model.throughput(fat, STAT)
+
+
+def test_reclaim_cooldown_prevents_thrash():
+    brain = ClusterBrain(_capacity(), reclaim_cooldown=3)
+    fat = JobResources(w=8, p=4, cpu_w=32.0, cpu_p=16.0)
+    job = _job(current=fat)
+    plans1 = brain.adjust([job])
+    if job.job_id in plans1:                 # planned (grown or reclaimed)...
+        plans2 = brain.adjust([job])
+        # ...the very next round must leave it alone (cooldown)
+        assert job.job_id not in plans2 or \
+            brain._last_plan_round[job.job_id] == brain._round
+
+
+# ------------------------------------------------------------------ stage 3
+def test_degradation_decays_with_halflife():
+    brain = ClusterBrain(_capacity(), degradation_halflife_s=600.0)
+    p0 = brain.report_degradation("j0", "failure", now=0.0)
+    assert p0 == pytest.approx(DEGRADATION_WEIGHTS["failure"])
+    assert brain.degradation_penalty("j0", now=600.0) == pytest.approx(p0 / 2)
+    assert brain.degradation_penalty("j0", now=1200.0) == pytest.approx(p0 / 4)
+    # events accumulate on top of the decayed mass
+    p1 = brain.report_degradation("j0", "oom", now=600.0)
+    assert p1 == pytest.approx(p0 / 2 + DEGRADATION_WEIGHTS["oom"])
+
+
+def test_degraded_job_gets_priority_in_greedy():
+    """Eqn 14: under contention for the last capacity slice, the degraded
+    job's boosted WG weight wins the plan."""
+    model = _model()
+    a, b = _job("a", model=model), _job("b", model=model)
+    cands = {jid: generate_candidates(_job(jid, model=model), seed=0)
+             for jid in ("a", "b")}
+    # capacity admits only a small delta over current allocations
+    current = a.current.total_cpu() + b.current.total_cpu()
+    cap = ClusterCapacity(current + 40.0, 16384.0)
+    b.degradation = 10.0
+    plans = weighted_greedy_select([a, b], cands, cap)
+    if plans:                                # contention ⇒ degraded job first
+        assert "b" in plans or "a" not in plans
+
+
+# ------------------------------------------------------------ operator knobs
+def test_trust_region_bounds_candidates():
+    """trust_factor=2 keeps every NSGA candidate within [v/2, 2v] of the
+    current allocation — no extrapolation outside the region the locally
+    fitted model has earned."""
+    job = _job(current=JobResources(w=4, p=2, cpu_w=8, cpu_p=8))
+    cands = generate_candidates(job, seed=0, trust_factor=2.0)
+    assert cands
+    for c in cands:
+        r = c.resources
+        assert 2 <= r.w <= 8
+        assert 1 <= r.p <= 4
+        assert 4.0 <= r.cpu_w <= 16.0
+        assert 4.0 <= r.cpu_p <= 16.0
+
+
+def test_predicted_idle_frac_in_unit_interval_and_penalizes():
+    job = _job()
+    frac = predicted_idle_frac(job, job.current)
+    assert 0.0 <= frac <= 1.0
+    # an absurdly over-provisioned plan predicts more idle reservation
+    fat = JobResources(w=4, p=2, cpu_w=32.0, cpu_p=32.0)
+    assert predicted_idle_frac(job, fat) >= frac
+
+
+def test_record_history_fits_kind_model_and_warm_starts():
+    brain = ClusterBrain(_capacity())
+    meta = JobMeta("wide_deep", dense_params=1e6, emb_rows=5e6, emb_dim=16,
+                   batch_size=512, dataset_samples=1e7, user="u0")
+    rng = np.random.default_rng(0)
+    obs = []
+    for _ in range(16):
+        r = JobResources(w=int(rng.integers(1, 16)), p=int(rng.integers(1, 8)),
+                         cpu_w=float(rng.integers(2, 16)),
+                         cpu_p=float(rng.integers(2, 16)))
+        obs.append((r, STAT, synthesize_t_iter(r, STAT, ALPHA, BETA)))
+    final = JobResources(w=8, p=2, cpu_w=16, cpu_p=8)
+    brain.record_history(meta, STAT, obs, final_config=final, throughput=1e4)
+    assert "wide_deep" in brain.kind_models
+    assert brain.kind_models["wide_deep"].fitted
+    # a similar new job warm-starts off the recorded config, not the default
+    plan = brain.allocate(meta, STAT, default=JobResources(w=1, p=1,
+                                                           cpu_w=1, cpu_p=1))
+    assert plan != JobResources(w=1, p=1, cpu_w=1, cpu_p=1)
+
+
+def test_complete_clears_all_ledgers():
+    brain = ClusterBrain(_capacity())
+    job = _job("gone")
+    brain.adjust([job])
+    brain.report_degradation("gone", "failure", now=0.0)
+    brain.complete("gone", throughput=0.0)
+    assert "gone" not in brain._optimized_at
+    assert "gone" not in brain._cached
+    assert "gone" not in brain._last_plan_round
+    assert brain.degradation_penalty("gone") == 0.0

@@ -2,7 +2,9 @@
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.core.nsga2 import fast_non_dominated_sort, Individual, nsga2
+from repro.core.nsga2 import (
+    crowding_distance, fast_non_dominated_sort, Individual, nsga2,
+)
 
 
 def _dominates(a, b):
@@ -47,3 +49,107 @@ def test_nondominated_sort_rank0_correct(seed, n):
         for p in front_i:
             assert any(_dominates(q.f, p.f) for q in pop)
     assert sum(len(f) for f in fronts) == n
+
+
+# ---------------------------------------------------------------- properties
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(2, 16))
+def test_sort_is_permutation_invariant(seed, n):
+    """The rank assigned to an objective vector is independent of the order
+    in which the population is presented."""
+    rng = np.random.default_rng(seed)
+    fs = [rng.random(2) for _ in range(n)]
+    pop = [Individual(x=np.zeros(1), f=f) for f in fs]
+    fast_non_dominated_sort(pop)
+    ranks = {i: p.rank for i, p in enumerate(pop)}
+
+    perm = rng.permutation(n)
+    pop2 = [Individual(x=np.zeros(1), f=fs[i]) for i in perm]
+    fast_non_dominated_sort(pop2)
+    for pos, orig_idx in enumerate(perm):
+        assert pop2[pos].rank == ranks[orig_idx]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_crowding_distance_is_deterministic(seed):
+    """Two identical fronts get identical crowding values — including the
+    tie-break behavior for duplicated objective vectors."""
+    rng = np.random.default_rng(seed)
+    fs = [rng.random(2) for _ in range(8)]
+    fs.append(fs[0].copy())                       # deliberate duplicate
+    a = [Individual(x=np.zeros(1), f=f.copy()) for f in fs]
+    b = [Individual(x=np.zeros(1), f=f.copy()) for f in fs]
+    crowding_distance(a)
+    crowding_distance(b)
+    got_a = sorted(p.crowding for p in a)
+    got_b = sorted(p.crowding for p in b)
+    assert got_a == got_b
+
+
+def test_all_identical_objectives_single_front():
+    """Degenerate population: every candidate has the same objectives, so
+    they are all rank 0 and crowding never divides by the zero range."""
+    pop = [Individual(x=np.zeros(1), f=np.array([1.0, 2.0])) for _ in range(6)]
+    fronts = fast_non_dominated_sort(pop)
+    assert len(fronts) == 1 and len(fronts[0]) == 6
+    crowding_distance(fronts[0])
+    assert all(np.isfinite(p.crowding) or np.isinf(p.crowding)
+               for p in fronts[0])
+
+
+def test_all_identical_objectives_nsga2_runs():
+    front = nsga2(lambda x: (1.0, 2.0), [(0, 4)], pop_size=8,
+                  generations=3, seed=0)
+    assert front                                   # at least one survivor
+    for _, f in front:
+        assert tuple(f) == (1.0, 2.0)
+
+
+def test_single_candidate_population():
+    pop = [Individual(x=np.zeros(1), f=np.array([0.5, 0.5]))]
+    fronts = fast_non_dominated_sort(pop)
+    assert len(fronts) == 1 and fronts[0][0].rank == 0
+    crowding_distance(fronts[0])
+    front = nsga2(lambda x: (x[0], -x[0]), [(0, 3)], pop_size=2,
+                  generations=2, seed=0)
+    assert front
+
+
+def test_nan_objectives_rejected():
+    import pytest
+    with pytest.raises(ValueError, match="non-finite"):
+        nsga2(lambda x: (float("nan"), 1.0), [(0, 1)], pop_size=4,
+              generations=1, seed=0)
+
+
+def test_inf_objectives_rejected():
+    import pytest
+    with pytest.raises(ValueError, match="non-finite"):
+        nsga2(lambda x: (1.0, float("inf")), [(0, 1)], pop_size=4,
+              generations=1, seed=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_nsga2_deterministic_for_fixed_seed(seed):
+    def obj(x):
+        return (x[0] ** 2 + x[1], (x[0] - 3) ** 2 + 0.1 * x[1])
+
+    bounds = [(0, 8), (0, 8)]
+    a = nsga2(obj, bounds, pop_size=12, generations=6, seed=seed)
+    b = nsga2(obj, bounds, pop_size=12, generations=6, seed=seed)
+    assert len(a) == len(b)
+    for (xa, fa), (xb, fb) in zip(a, b):
+        assert np.array_equal(xa, xb) and np.array_equal(fa, fb)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), lo=st.integers(-4, 0), hi=st.integers(1, 6))
+def test_front_respects_bounds(seed, lo, hi):
+    front = nsga2(lambda x: (x[0] ** 2, (x[0] - 1) ** 2), [(lo, hi)],
+                  pop_size=10, generations=4, integer=False, seed=seed)
+    for x, _ in front:
+        assert lo - 1e-9 <= x[0] <= hi + 1e-9

@@ -54,6 +54,82 @@ def test_throughput_monotonic_in_worker_cpu(w, p, cw, cp):
     assert model.throughput(r2, STAT) >= model.throughput(r1, STAT) - 1e-9
 
 
+# ------------------------------------------------------------ fit regression
+
+
+def _grid_obs(alpha, beta_sum, noise=0.0, seed=0):
+    """Structured w×p×λ grid (not random): the regression fixture the NNLS
+    recovery contract is pinned against."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for w in (1, 4, 8, 16):
+        for p in (1, 2, 8):
+            for c in (2, 8, 24):
+                r = JobResources(w=w, p=p, cpu_w=float(c), cpu_p=float(c))
+                out.append((r, STAT, synthesize_t_iter(
+                    r, STAT, alpha, beta_sum, noise=noise, rng=rng)))
+    return out
+
+
+def test_grid_recovery_rel_error_pinned():
+    """Planted coefficients on the structured grid: NNLS must recover every
+    α within 2 % relative error and Σβ within 5 % (noiseless)."""
+    model = PerfModel().fit(_grid_obs(ALPHA, BETA))
+    for a_hat, a_true in zip(model.alpha, ALPHA):
+        assert abs(a_hat - a_true) / a_true < 0.02
+    assert abs(model.beta_sum - BETA) / BETA < 0.05
+
+
+def test_grid_recovery_under_noise_pinned():
+    """5 % lognormal noise: predictions on a held-out grid stay within a
+    pinned 10 % median relative error."""
+    model = PerfModel().fit(_grid_obs(ALPHA, BETA, noise=0.05, seed=3))
+    clean = _grid_obs(ALPHA, BETA)
+    rel = [abs(model.t_iter(r, s) - t) / t for r, s, t in clean]
+    assert float(np.median(rel)) < 0.10
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), noise=st.floats(0.0, 0.5))
+def test_coefficients_always_nonnegative(seed, noise):
+    """The NNLS domain contract holds for any noise level and draw."""
+    model = PerfModel().fit(_obs(48, seed, noise=noise))
+    assert np.all(model.alpha >= 0.0)
+    assert model.beta_sum >= 0.0
+
+
+def test_beta_sum_identifiability_contract():
+    """The four β's share the constant feature column, so only Σβ is
+    identifiable (the paper reports exactly that): two ground truths whose
+    per-term β's differ but sum equally must produce the same fit."""
+    def synth(beta_split, seed):
+        rng = np.random.default_rng(seed)
+        out = []
+        for r, s, _ in _grid_obs(ALPHA, 0.0):
+            x = feature_vector(r, s)
+            t = float(x[:4] @ np.asarray(ALPHA)) + sum(beta_split)
+            out.append((r, s, max(t, 1e-6)))
+        del rng
+        return out
+
+    m1 = PerfModel().fit(synth((2.45e-3, 0.0, 0.0, 0.0), 0))
+    m2 = PerfModel().fit(synth((1.0e-3, 1.0e-3, 0.45e-3, 0.0), 0))
+    np.testing.assert_allclose(m1.alpha, m2.alpha, rtol=1e-6, atol=1e-12)
+    assert m1.beta_sum == pytest.approx(m2.beta_sum, rel=1e-6)
+    assert m1.beta_sum == pytest.approx(2.45e-3, rel=0.05)
+
+
+def test_degenerate_observations_fall_back():
+    """All observations at one resource point: the system is singular; the
+    fit must not raise and must stay in the non-negative domain."""
+    r = JobResources(w=4, p=2, cpu_w=8, cpu_p=8)
+    obs = [(r, STAT, 0.5)] * 12
+    model = PerfModel().fit(obs)
+    assert model.fitted
+    assert np.all(model.alpha >= 0.0) and model.beta_sum >= 0.0
+    assert model.t_iter(r, STAT) > 0.0
+
+
 def test_feature_vector_matches_paper_structure():
     r = JobResources(w=4, p=2, cpu_w=8, cpu_p=8)
     x = feature_vector(r, STAT)

@@ -97,6 +97,81 @@ def test_recovery_time_parameters_are_config():
     assert sim.unmitigated_s == 900.0
 
 
+def test_event_log_byte_identical_for_fixed_seeds():
+    """The determinism contract the replayed benches pin: same
+    (workload, scheduler seed, failure_seed, config) ⇒ the serialized event
+    log reproduces byte-for-byte; a different failure seed diverges."""
+    def log(failure_seed):
+        jobs = generate_jobs(8, seed=4, mean_msamples=20.0)
+        sim = CloudSim("dlrover_rm", total_cpu=4096, total_mem_gb=32768,
+                       seed=2, failure_seed=failure_seed,
+                       pod_failure_rate_per_day=2.0,
+                       straggler_rate_per_pod_per_day=0.3)
+        return sim.run(jobs, horizon_s=8 * 3600).event_log()
+
+    a, b = log(77), log(77)
+    assert a == b
+    assert "start" in a and "complete" in a
+    assert log(78) != a
+
+
+def test_on_event_feeds_brain_degradation():
+    """Stage-3 plumbing: engine events reach the scheduler hook, and for
+    DLRover-RM they land in the brain's degradation ledger."""
+    jobs = generate_jobs(6, seed=4, mean_msamples=20.0)
+    sim = CloudSim("dlrover_rm", total_cpu=4096, total_mem_gb=32768,
+                   seed=2, failure_seed=77, pod_failure_rate_per_day=5.0,
+                   straggler_rate_per_pod_per_day=1.0)
+    res = sim.run(jobs, horizon_s=6 * 3600)
+    engine_events = [(t, j, k) for t, j, k in res.events
+                     if k in ("failure", "straggler", "hot_ps", "oom")]
+    assert engine_events, "failure-prone run must emit instability events"
+    t, jid, kind = engine_events[-1]
+    penalty = sim.scheduler.brain.degradation_penalty(jid, now=t)
+    assert penalty > 0.0
+
+
+def test_baseline_scheduler_ignores_events():
+    """The base on_event hook is a no-op: baselines never raise on it."""
+    jobs = generate_jobs(4, seed=4, mean_msamples=20.0)
+    sim = CloudSim("es", total_cpu=4096, total_mem_gb=32768, seed=2,
+                   failure_seed=77, pod_failure_rate_per_day=5.0)
+    res = sim.run(jobs, horizon_s=4 * 3600)
+    assert res.records                      # ran to the horizon without error
+
+
+def test_capacity_profile_moves_shared_capacity():
+    """A CapacityWave profile must move the shared ClusterCapacity each
+    step (recorded in ts_capacity_cpu) and bound admission during dips."""
+    from repro.sim.trace import CapacityWave
+    jobs = generate_jobs(8, seed=2, mean_msamples=20.0)
+    wave = CapacityWave(2048.0, 16384.0, amplitude=0.5, period_s=2 * 3600.0)
+    sim = CloudSim("static_user", total_cpu=2048, total_mem_gb=16384,
+                   seed=1, enable_failures=False, capacity_profile=wave)
+    res = sim.run(jobs, horizon_s=8 * 3600)
+    caps = res.ts_capacity_cpu
+    assert len(caps) > 10
+    assert max(caps) > 2048.0 * 1.3 and min(caps) < 2048.0 * 0.7
+    # allocation never exceeds the instantaneous envelope at admission time
+    for t, alloc in zip(res.ts_time, res.ts_alloc_cpu):
+        assert alloc <= 2048.0 * 1.5 + 1e-6
+
+
+def test_replay_summary_rows_deterministic():
+    """The bench-facing replay path: same seeds ⇒ identical summary dict."""
+    from repro.sim.replay import replay, summarize
+    from repro.sim.trace import default_trace_path, load_trace, trace_to_jobs
+    jobs = trace_to_jobs(load_trace(default_trace_path()), seed=3)[:10]
+
+    def rows():
+        res = replay(jobs, "static_user", total_cpu=2048.0,
+                     total_mem_gb=16384.0, horizon_s=6 * 3600.0, seed=3,
+                     failure_seed=77, amplitude=0.15)
+        return summarize(res)
+
+    assert rows() == rows()
+
+
 def test_measured_timings_change_downtime():
     """The sim actually consumes injected timings: a catastrophically slow
     recovery model must show up as more downtime under heavy failures."""

@@ -1,0 +1,148 @@
+"""Trace ingestion layer: fixture round-trip, schema validation, synthetic
+marginals, SimJob calibration, and the time-varying capacity profile."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.sim.trace import (
+    REPLAYABLE_STATUSES, TRACE_COLUMNS, CapacityWave, TraceJob,
+    default_trace_path, load_trace, synthesize_trace, trace_marginals,
+    trace_to_jobs, write_trace,
+)
+from repro.sim.workload import true_throughput
+
+
+def test_fixture_loads_and_has_replayable_jobs():
+    rows = load_trace(default_trace_path())
+    assert len(rows) >= 40
+    replayable = [r for r in rows if r.status in REPLAYABLE_STATUSES]
+    assert len(replayable) >= 40
+    # non-replayable rows are present on purpose (loader must not choke)
+    assert any(r.status not in REPLAYABLE_STATUSES for r in rows)
+
+
+def test_roundtrip_write_load_identical(tmp_path):
+    rows = load_trace(default_trace_path())
+    p = tmp_path / "copy.csv"
+    write_trace(str(p), rows)
+    assert load_trace(str(p)) == rows
+    # and byte-stable: writing the reloaded rows reproduces the file
+    p2 = tmp_path / "copy2.csv"
+    write_trace(str(p2), load_trace(str(p)))
+    assert p.read_bytes() == p2.read_bytes()
+
+
+def test_bad_header_rejected(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("job,user,status\nj0,u0,Terminated\n")
+    with pytest.raises(ValueError, match="bad trace header"):
+        load_trace(str(p))
+
+
+def test_bad_row_reports_path_and_line(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text(",".join(TRACE_COLUMNS) + "\n"
+                 "j0,u0,Terminated,0,600,800,16,0,4\n"
+                 "j1,u0,Terminated,60,not_a_number,800,16,0,4\n")
+    with pytest.raises(ValueError, match=r"bad\.csv:3"):
+        load_trace(str(p))
+
+
+def test_synthesize_deterministic_and_schema_valid():
+    a = synthesize_trace(50, seed=7)
+    b = synthesize_trace(50, seed=7)
+    assert a == b
+    c = synthesize_trace(50, seed=8)
+    assert c != a
+    for r in a:
+        assert r.status == "Terminated"
+        assert r.duration >= 60.0
+        assert r.plan_cpu % 100 == 0 and 100 <= r.plan_cpu <= 3200
+        assert 1 <= r.inst_num <= 48
+    subs = [r.submit_time for r in a]
+    assert subs == sorted(subs)
+
+
+def test_synthetic_marginals_match_fixture():
+    """The generator's output distribution tracks the fitted marginals."""
+    rows = load_trace(default_trace_path())
+    replayable = [r for r in rows if r.status in REPLAYABLE_STATUSES]
+    m = trace_marginals(replayable)
+    syn = synthesize_trace(600, seed=0, marginals=m)
+    sm = trace_marginals(syn)
+    assert sm.log_duration_mean == pytest.approx(m.log_duration_mean, abs=0.35)
+    assert sm.log_cpu_mean == pytest.approx(m.log_cpu_mean, abs=0.35)
+    assert sm.interarrival_mean_s == pytest.approx(
+        m.interarrival_mean_s, rel=0.35)
+    assert sm.inst_mean == pytest.approx(m.inst_mean, rel=0.5)
+
+
+def test_marginals_empty_trace_rejected():
+    with pytest.raises(ValueError, match="empty trace"):
+        trace_marginals([])
+
+
+def test_trace_to_jobs_deterministic_and_filtered():
+    rows = load_trace(default_trace_path())
+    a = trace_to_jobs(rows, seed=3)
+    b = trace_to_jobs(rows, seed=3)
+    assert [j.job_id for j in a] == [j.job_id for j in b]
+    assert [j.total_samples for j in a] == [j.total_samples for j in b]
+    assert [j.user_request for j in a] == [j.user_request for j in b]
+    # only replayable rows survive; arrivals are normalized and sorted
+    n_replayable = sum(r.status in REPLAYABLE_STATUSES for r in rows)
+    assert len(a) == n_replayable
+    arr = [j.arrival_s for j in a]
+    assert arr[0] == 0.0 and arr == sorted(arr)
+
+
+def test_trace_to_jobs_calibrates_static_replay():
+    """The static_user anchor: running each job at its user request must
+    reproduce the traced duration (that's what total_samples encodes)."""
+    rows = load_trace(default_trace_path())
+    replayable = sorted(
+        (r for r in rows if r.status in REPLAYABLE_STATUSES),
+        key=lambda r: (r.submit_time, r.job_name))
+    jobs = trace_to_jobs(rows, seed=3)
+    for row, job in zip(replayable, jobs):
+        thp = true_throughput(job, job.user_request)
+        assert job.total_samples / thp == pytest.approx(row.duration, rel=0.01)
+
+
+def test_trace_to_jobs_kind_is_name_stable():
+    """Model-kind assignment depends only on the job name, not on seed."""
+    rows = load_trace(default_trace_path())
+    a = trace_to_jobs(rows, seed=0)
+    b = trace_to_jobs(rows, seed=99)
+    assert [j.kind for j in a] == [j.kind for j in b]
+
+
+@settings(max_examples=20, deadline=None)
+@given(amplitude=st.floats(0.0, 0.9), period_h=st.floats(1.0, 24.0),
+       t_h=st.floats(0.0, 48.0))
+def test_capacity_wave_bounds(amplitude, period_h, t_h):
+    wave = CapacityWave(1000.0, 8000.0, amplitude=amplitude,
+                        period_s=period_h * 3600.0)
+    cpu, mem = wave(t_h * 3600.0)
+    assert 1000.0 * (1 - amplitude) - 1e-6 <= cpu <= 1000.0 * (1 + amplitude) + 1e-6
+    assert cpu >= 1000.0 * 0.05
+    assert mem / 8000.0 == pytest.approx(cpu / 1000.0)
+
+
+def test_capacity_wave_periodic_and_flat_at_zero():
+    wave = CapacityWave(100.0, 800.0, amplitude=0.2, period_s=3600.0)
+    assert wave(0.0)[0] == pytest.approx(wave(3600.0)[0])
+    assert wave(900.0)[0] == pytest.approx(100.0 * 1.2)
+    flat = CapacityWave(100.0, 800.0, amplitude=0.0)
+    for t in (0.0, 1234.5, 7200.0):
+        assert flat(t) == (100.0, 800.0)
+
+
+def test_tracejob_is_frozen():
+    row = load_trace(default_trace_path())[0]
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        row.duration = 1.0  # type: ignore[misc]
+    assert math.isfinite(row.submit_time)
