@@ -18,33 +18,52 @@ Plans are fully scripted (no hidden randomness at fire time); the only RNG —
 seeded, explicit — picks which bytes a corruption flips, so every chaos run
 is replayable. ``repro.train.supervisor`` is the recovery side of the loop.
 
-Spec grammar (the launcher's ``--chaos`` flag)::
+Spec grammar (the launcher's ``--chaos`` / ``--chaos-proc`` flags)::
 
     spec     := fault ("," fault)*
     fault    := kind "@" step ["x" count] [":" param]
     kind     := ps_loss | hang | straggler | oom | ckpt_corrupt | ckpt_truncate
+              | kill | stop | kill_ckpt | kill_loop
 
 Examples: ``ps_loss@10`` (lose one PS shard at step 10), ``hang@20:0.5``
 (stall 0.5 s at step 20), ``straggler@30x5:0.05`` (50 ms extra per step for
 steps 30..34), ``ckpt_corrupt@40`` (corrupt the first blob persisted at
 step ≥ 40 and drop the memory tier — only older disk blobs survive).
+
+The second block of kinds is **process-level** (the ``--chaos-proc`` mode):
+they are fired *inside a real worker process* by ``ProcessFaultInjector``
+and model pod-eviction-class failures the in-process injector cannot —
+``kill@10`` SIGKILLs the worker right before it executes global step 10,
+``stop@10`` SIGSTOPs it (a wedged process: only the job master's heartbeat
+deadline can see it), ``kill_ckpt@10`` SIGKILLs in the checkpoint layer's
+pre-commit window (mid-write: the staging dir is complete but the atomic
+rename never happened), and ``kill_loop@10x3`` SIGKILLs the first three
+incarnations at step 10 (a crash loop bounded only by the job master's
+capped re-exec budget). ``repro.train.job_master`` is the recovery side.
 """
 from __future__ import annotations
 
 import os
+import signal
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-KINDS = ("ps_loss", "hang", "straggler", "oom", "ckpt_corrupt", "ckpt_truncate")
+KINDS = ("ps_loss", "hang", "straggler", "oom", "ckpt_corrupt", "ckpt_truncate",
+         "kill", "stop", "kill_ckpt", "kill_loop")
+
+#: kinds fired at process level by ``ProcessFaultInjector`` (the worker kills
+#: itself) rather than through the in-process trainer/data/checkpoint hooks
+PROC_KINDS = ("kill", "stop", "kill_ckpt", "kill_loop")
 
 # default param per kind: ps_loss = shards lost, hang = stall seconds,
 # straggler = extra seconds per step, others unused
 _DEFAULT_PARAM = {"ps_loss": 1.0, "hang": 30.0, "straggler": 0.05,
-                  "oom": 0.0, "ckpt_corrupt": 0.0, "ckpt_truncate": 0.0}
+                  "oom": 0.0, "ckpt_corrupt": 0.0, "ckpt_truncate": 0.0,
+                  "kill": 0.0, "stop": 0.0, "kill_ckpt": 0.0, "kill_loop": 0.0}
 
 
 # --------------------------------------------------------------------- errors
@@ -289,3 +308,117 @@ class FaultInjector:
                     self.fired.append((step, spec.kind))
                     out.append(spec)
         return out
+
+
+# --------------------------------------------------------- process-level chaos
+class ProcessFaultInjector:
+    """Fires the ``PROC_KINDS`` of a plan *inside a real worker process*.
+
+    Unlike ``FaultInjector`` (scripted exceptions inside one interpreter),
+    these faults end the process: ``kill``/``kill_loop``/``kill_ckpt`` raise
+    SIGKILL against the worker's own pid, ``stop`` raises SIGSTOP (the
+    process freezes mid-run; only the job master's heartbeat deadline can
+    detect it and SIGKILL the husk). Recovery is therefore exercised for
+    real — a fresh interpreter must re-exec, restore the newest valid
+    layout-stamped checkpoint, and replay.
+
+    Determinism across re-execs comes from **incarnation gating** rather
+    than the in-process injector's spent-set (which dies with the process):
+    the job master passes each worker its incarnation number (0 for the
+    first exec, +1 per re-exec), and
+
+    * ``kill`` / ``stop`` / ``kill_ckpt`` fire only in incarnation 0 — the
+      cloud's pod is already gone; the replacement replaying the same
+      global step must not re-die;
+    * ``kill_loop`` fires in every incarnation ``< count`` — a scripted
+      crash loop whose only exit is the master's capped re-exec budget
+      (or outliving ``count``).
+
+    ``signal_fn`` is a test seam (defaults to ``os.kill`` on own pid).
+    """
+
+    def __init__(self, plan: FaultPlan, *, incarnation: int = 0,
+                 signal_fn: Optional[Callable[[int], None]] = None,
+                 log_path: Optional[str] = None):
+        self.plan = plan
+        self.incarnation = int(incarnation)
+        self._signal = signal_fn if signal_fn is not None else (
+            lambda signum: os.kill(os.getpid(), signum))
+        self.log_path = log_path
+
+    @staticmethod
+    def fires(spec: FaultSpec, step: int, incarnation: int) -> bool:
+        """Pure gating predicate: does ``spec`` fire here? (doctested)
+
+        >>> from repro.core.faults import FaultSpec, ProcessFaultInjector
+        >>> f = ProcessFaultInjector.fires
+        >>> f(FaultSpec("kill", 5), 5, 0)          # first exec dies at step 5
+        True
+        >>> f(FaultSpec("kill", 5), 5, 1)          # the re-exec replays it
+        False
+        >>> f(FaultSpec("kill_loop", 5, count=3), 5, 2)   # crash loop: 0,1,2
+        True
+        >>> f(FaultSpec("kill_loop", 5, count=3), 5, 3)   # incarnation 3 lives
+        False
+        >>> f(FaultSpec("kill_ckpt", 4), 6, 0)     # first persist at step >= 4
+        True
+        >>> f(FaultSpec("ps_loss", 5), 5, 0)       # in-process kind: not ours
+        False
+        """
+        if spec.kind in ("kill", "stop", "kill_ckpt"):
+            if incarnation != 0:
+                return False
+        elif spec.kind == "kill_loop":
+            if incarnation >= spec.count:
+                return False
+        else:
+            return False
+        if spec.kind == "kill_ckpt":
+            return step >= spec.step
+        return step == spec.step
+
+    def _log(self, spec: FaultSpec, step: int, detail: str) -> None:
+        """Append a pre-death marker (O_APPEND: survives the SIGKILL)."""
+        if self.log_path is None:
+            return
+        import json
+        with open(self.log_path, "a") as f:
+            f.write(json.dumps({
+                "t": time.time(), "kind": "proc_fault_fired",
+                "fault": spec.kind, "step": int(step),
+                "incarnation": self.incarnation, "detail": detail}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    # ------------------------------------------------------------ worker hooks
+    def before_step(self, step: int) -> None:
+        """Worker-loop hook; call right before executing global ``step``.
+
+        May not return: ``kill``/``kill_loop`` specs SIGKILL the process,
+        ``stop`` specs SIGSTOP it (execution resumes here only if an
+        external SIGCONT arrives — the job master never sends one; it
+        SIGKILLs the husk on heartbeat expiry and re-execs).
+        """
+        for spec in self.plan.specs:
+            if spec.kind in ("kill", "kill_loop") and \
+                    self.fires(spec, step, self.incarnation):
+                self._log(spec, step, "SIGKILL self before step")
+                self._signal(signal.SIGKILL)
+            elif spec.kind == "stop" and \
+                    self.fires(spec, step, self.incarnation):
+                self._log(spec, step, "SIGSTOP self before step")
+                self._signal(signal.SIGSTOP)
+
+    def on_pre_commit(self, path: str, step: int) -> None:
+        """Checkpoint-layer hook (``FlashCheckpoint(pre_commit_hook=...)``).
+
+        Fires in the mid-write window: the staging directory under ``path``
+        is fully written (data + manifest, checksums valid) but the atomic
+        rename has not happened. A SIGKILL here is the worst torn-save case
+        — ``valid_steps`` must never count the leftover.
+        """
+        for spec in self.plan.specs:
+            if spec.kind == "kill_ckpt" and \
+                    self.fires(spec, step, self.incarnation):
+                self._log(spec, step, f"SIGKILL self mid-save of {path}")
+                self._signal(signal.SIGKILL)

@@ -93,15 +93,24 @@ class FlashCheckpoint:
     ``fault_hook(path, step)`` — if given — runs right after each blob lands
     on disk (and before eviction); it is the checkpoint-layer injection
     point of ``repro.core.faults.FaultInjector.on_persist``.
+
+    ``pre_commit_hook(tmp_path, step)`` — if given — runs in the mid-write
+    window: the staging directory is fully written (data + manifest) but
+    ``_commit`` has not renamed it yet. It is the injection point of
+    ``repro.core.faults.ProcessFaultInjector.on_pre_commit`` (kill-during-
+    checkpoint-write chaos): a process killed inside the hook must leave
+    nothing that ``valid_steps``/``restore`` would count as a checkpoint.
     """
 
     def __init__(self, persist_dir: Optional[str] = None, *,
                  keep: int = 2, async_persist: bool = True,
-                 fault_hook: Optional[Callable[[str, int], None]] = None):
+                 fault_hook: Optional[Callable[[str, int], None]] = None,
+                 pre_commit_hook: Optional[Callable[[str, int], None]] = None):
         self.persist_dir = persist_dir
         self.keep = keep
         self.async_persist = async_persist
         self.fault_hook = fault_hook
+        self.pre_commit_hook = pre_commit_hook
         self._mem: Dict[int, Dict[str, np.ndarray]] = {}
         self._mem_order: List[int] = []
         self._pool = ThreadPoolExecutor(max_workers=1)
@@ -162,6 +171,8 @@ class FlashCheckpoint:
         os.makedirs(tmp)
         with open(os.path.join(tmp, _DATA_FILE), "wb") as f:
             np.savez(f, **{k: v for k, v in flat.items()})
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
             "format": _FORMAT, "step": int(step),
             "leaves": {k: {"crc32": _leaf_crc(v),
@@ -170,13 +181,40 @@ class FlashCheckpoint:
         }
         with open(os.path.join(tmp, _MANIFEST_FILE), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if self.pre_commit_hook is not None:     # kill-during-save chaos seam
+            self.pre_commit_hook(tmp, step)
+        self._commit(tmp, final)
+        if self.fault_hook is not None:
+            self.fault_hook(final, step)
+        self._evict()
+        self.last_persist_seconds = time.perf_counter() - t0
+
+    def _commit(self, tmp: str, final: str) -> None:
+        """THE atomic commit point: one ``os.replace`` of the staging dir.
+
+        Everything before this call is preparation a kill may interrupt
+        freely — a leftover ``*.tmp-<pid>`` dir is skipped by
+        ``_disk_steps`` and never counted by ``valid_steps``/``restore``.
+        Everything after it is a fully-valid checkpoint: the data and
+        manifest files were fsynced before the rename, and the parent
+        directory entry is fsynced after it, so the blob either exists
+        completely under its valid name or not at all — there is no state
+        in between for a SIGKILL (or power loss) to expose.
+        """
         if os.path.isdir(final):                 # re-persist of the same step
             shutil.rmtree(final)
         elif os.path.exists(final):              # legacy file under this name
             os.remove(final)
-        os.replace(tmp, final)                   # the atomic commit point
-        if self.fault_hook is not None:
-            self.fault_hook(final, step)
+        os.replace(tmp, final)
+        dir_fd = os.open(os.path.dirname(final) or ".", os.O_RDONLY)
+        try:
+            os.fsync(dir_fd)                     # durably publish the rename
+        finally:
+            os.close(dir_fd)
+
+    def _evict(self) -> None:
         for old in self._disk_steps()[:-self.keep]:
             entry = os.path.join(self.persist_dir, f"ckpt_{old:012d}")
             try:
@@ -186,7 +224,6 @@ class FlashCheckpoint:
                     os.remove(entry + ".npz")
             except OSError as e:
                 self._event("evict_failed", step=old, error=str(e))
-        self.last_persist_seconds = time.perf_counter() - t0
 
     def wait(self) -> None:
         for fut in self._pending:

@@ -31,6 +31,16 @@ class MigrationTimings:
     rds_ckpt_load_s: float = 90.0
     flash_ckpt_save_s: float = 1.0     # in-memory tier (<1 s for 20 GB, §5.2)
     flash_ckpt_load_s: float = 2.0
+    # process re-exec on a still-live pod (job-master kill/re-exec path).
+    # None = fall back to provision_s (the pre-measurement behavior); the
+    # kill-matrix harness fills it with JobMasterReport.measured_timings()
+    worker_reexec_s: Optional[float] = None
+
+    def reexec_s(self) -> float:
+        """Worker-replacement horizon: measured re-exec when available,
+        else the conservative full pod provision."""
+        return self.provision_s if self.worker_reexec_s is None \
+            else self.worker_reexec_s
 
 
 @dataclass

@@ -93,6 +93,20 @@ def main() -> None:
                     help="run DLRM training under the recovery supervisor "
                          "(watchdog + restore-with-backoff) even without "
                          "injected faults")
+    ap.add_argument("--chaos-proc", default=None, metavar="SPEC",
+                    help="process-level fault plan, e.g. 'kill@5' or "
+                         "'kill_loop@3x2,stop@7': train in a REAL worker "
+                         "subprocess under the job-master daemon, which "
+                         "SIGKILLs/SIGSTOPs it per the plan and re-execs it "
+                         "from the newest valid checkpoint (see docs/CHAOS.md)")
+    ap.add_argument("--workdir", default=None,
+                    help="job-master working directory (heartbeats, loss "
+                         "logs, per-incarnation worker logs); default: "
+                         "a fresh temp dir")
+    ap.add_argument("--heartbeat-deadline", type=float, default=30.0,
+                    help="job-master staleness deadline in seconds after a "
+                         "worker's first 'ready' heartbeat (SIGSTOP/hang "
+                         "detection)")
     ap.add_argument("--step-deadline", type=float, default=None,
                     help="watchdog per-step deadline in seconds (hang "
                          "detection; None disables)")
@@ -103,7 +117,9 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.arch in DLRMS:
-        if args.chaos or args.supervise:
+        if args.chaos_proc is not None:
+            train_dlrm_chaos_proc(args)
+        elif args.chaos or args.supervise:
             train_dlrm_supervised(args)
         else:
             train_dlrm(args)
@@ -349,6 +365,55 @@ def train_dlrm_supervised(args) -> None:
           f"recovery_latency_mean_s={mean_lat:.4f}")
     if args.event_log:
         sup.write_event_log(args.event_log, report)
+        print(f"event log -> {args.event_log}")
+
+
+def train_dlrm_chaos_proc(args) -> None:
+    """DLRM training in a real worker subprocess under the job-master daemon
+    (``--chaos-proc``).
+
+    Unlike ``--chaos`` (in-process fault hooks under the supervisor), the
+    worker here is an actual OS process the plan SIGKILLs/SIGSTOPs; the
+    master detects the death via exit code or stale heartbeat and re-execs
+    a fresh incarnation that resumes from the newest valid layout-stamped
+    checkpoint — same process tree as a production pod restart.
+    """
+    import os
+    import tempfile
+
+    from repro.train.job_master import JobMaster, JobMasterConfig, WorkerSpec
+
+    workdir = args.workdir or tempfile.mkdtemp(prefix="chaos_proc_")
+    spec = WorkerSpec(
+        name="worker0", workdir=workdir,
+        ckpt_dir=args.ckpt_dir or os.path.join(workdir, "ckpt"),
+        arch=args.arch, steps=args.steps, ckpt_every=args.ckpt_every,
+        n_ps=args.n_ps, padded=args.padded_shards,
+        chaos_proc=args.chaos_proc,
+        opt_name=args.optimizer or "adagrad", lr=args.lr)
+    master = JobMaster([spec], JobMasterConfig(
+        heartbeat_deadline_s=args.heartbeat_deadline,
+        max_reexecs=args.max_restarts, seed=args.chaos_seed))
+    print(f"arch={args.arch} chaos-proc plan: {args.chaos_proc or 'none'} "
+          f"(workdir -> {workdir}, ckpt -> {spec.ckpt_dir})")
+    try:
+        report = master.run()
+    finally:
+        if args.event_log:                  # log survives a failed run too
+            master.write_event_log(args.event_log)
+    for ev in report.events:
+        print(f"  event {ev.kind} worker={ev.worker} {ev.detail}")
+    t = report.measured_timings()
+    losses = spec.read_losses()
+    final_loss = losses[-1]["loss"] if losses else float("nan")
+    print(f"CHAOS-PROC completed={report.completed} "
+          f"final_steps={report.final_steps} reexecs={report.reexecs} "
+          f"exit_history={report.exit_history} final_loss={final_loss:.6f} "
+          f"reexec_mean_s={t.reexec_s():.3f} "
+          f"restore_mean_s={t.flash_ckpt_load_s:.3f} "
+          f"wall_s={report.wall_seconds:.1f}")
+    if args.event_log:
+        master.write_event_log(args.event_log, report)
         print(f"event log -> {args.event_log}")
 
 

@@ -350,8 +350,11 @@ class CloudSim:
                         rj.record.failures += 1
                         emit(job_id, "failure")
                         if self.traits.dynamic_sharding:
-                            # shard requeued; worker replaced in background
-                            rj.capacity_loss_until = now + self.timings.provision_s
+                            # shard requeued; worker replaced in background.
+                            # the replacement horizon is the measured re-exec
+                            # latency when the job-master harness supplied one
+                            # (timings.worker_reexec_s), else pod provisioning
+                            rj.capacity_loss_until = now + self.timings.reexec_s()
                         else:
                             rj.samples_done = rj.last_ckpt_samples
                             dtime = self.timings.provision_s + self.timings.rds_ckpt_load_s

@@ -26,8 +26,12 @@ equality, not closeness).
 
 Scope note: the watchdog abandons a hung *attempt* (injected stalls are
 cancellable sleeps and unwind via ``AttemptAbandoned``); a truly wedged
-native call can only be killed at process level — the supervisor models the
-job-master side of that contract.
+native call can only be killed at process level. That process level exists
+now: ``repro.train.job_master`` promotes this supervisor to a daemon that
+spawns ``DLRMJob`` loops as real subprocesses (``repro.train.worker_main``),
+monitors heartbeat files + exit codes, and re-execs dead workers from the
+newest valid checkpoint — its public names are re-exported here so the
+in-process and process-level supervision surfaces live side by side.
 """
 from __future__ import annotations
 
@@ -37,7 +41,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FutureTimeout
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +54,13 @@ from repro.core.faults import (
 from repro.core.flash_checkpoint import FlashCheckpoint
 from repro.core.migration import MigrationTimings
 from repro.data.synthetic import criteo_batch
-from repro.sharding.policy import padded_layout_for_ranges, uniform_vocab_ranges
+from repro.sharding.policy import (
+    PaddedLayout, padded_layout_for_ranges, uniform_vocab_ranges,
+)
+from repro.train.job_master import (  # noqa: F401  (process-level surface)
+    JobMaster, JobMasterConfig, JobMasterReport, ReexecBudgetExceeded,
+    WorkerSpec,
+)
 from repro.train import elastic, optim, replan
 from repro.train import trainer as trainer_mod
 
@@ -99,16 +109,16 @@ class DLRMJob:
         self.ckpt_every = max(int(ckpt_every), 1)
         self.n_ps = int(n_ps)
         self.injector = injector
-        self.layout = None
+        self.layout: Optional[PaddedLayout] = None
         if padded:
             self.layout = padded_layout_for_ranges(
                 uniform_vocab_ranges(cfg.total_embedding_rows, self.n_ps))
         self.sparse_update = bool(sparse_update)
-        self.table_hot = None
-        self.vocab_ranges = None
+        self.table_hot: Optional[Any] = None     # measured cache plan rows
+        self.vocab_ranges: Optional[Any] = None  # applied placement ranges
         self.remapper = replan.EmbeddingRemapper(cfg.table_rows)
         self.state: Optional[Dict[str, Any]] = None
-        self.step_fn = None
+        self.step_fn: Optional[Callable[..., Any]] = None
         self.global_step = 0
         self.generation = 0          # bumped on every recovery; stale
         self._lock = threading.RLock()  # attempts see it and abandon
@@ -185,6 +195,7 @@ class DLRMJob:
             self._cancel = cancel
             gstep = self.global_step
             batch = self.batch_for(gstep)
+            assert self.step_fn is not None, "run_step before start()"
             state, m = self.step_fn(self.state, batch)
             loss = float(m["loss"])             # forces host sync: real timing
             self.state = state
@@ -312,8 +323,8 @@ class Supervisor:
     surviving shard count; repeated OOM walks the degradation ladder.
     """
 
-    def __init__(self, job: DLRMJob, config: SupervisorConfig = None, *,
-                 injector: Optional[FaultInjector] = None):
+    def __init__(self, job: DLRMJob, config: Optional[SupervisorConfig] = None,
+                 *, injector: Optional[FaultInjector] = None):
         self.job = job
         self.cfg = config or SupervisorConfig()
         self.injector = injector if injector is not None else job.injector

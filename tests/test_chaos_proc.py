@@ -1,0 +1,182 @@
+"""Kill-matrix integration suite: real worker processes under the job master.
+
+Each cell trains the reduced wide_deep DLRM for 10 steps in a REAL
+subprocess (``repro.train.worker_main``) while ``--chaos-proc`` scripts the
+worker's death — SIGKILL before a step, SIGSTOP (caught by the heartbeat
+deadline), SIGKILL inside the checkpoint pre-commit window, or a repeated
+kill loop — and the job master re-execs it from the newest valid
+layout-stamped checkpoint.
+
+The headline assertion in every cell: the merged per-step loss log (latest
+incarnation wins for replayed steps) equals the no-fault subprocess run's
+**to the ulp** — recovery is bit-exact, not approximately converged. The
+measured death→ready latencies are then fed into
+``MigrationTimings.worker_reexec_s`` and priced by the cluster sim.
+
+Cells spawn JIT-compiling subprocesses (~5 s each incarnation); the matrix
+covers {fault kind} x {kill step} x {n_ps} x {padded/flat} with each axis
+value hit at least twice. CI's ``chaos-proc-smoke`` job runs only the
+``kill_at4-ps4-padded`` cell (plus its baseline) under a hard deadline.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.migration import MigrationTimings
+from repro.train.job_master import (JobMaster, JobMasterConfig,
+                                    JobMasterReport, WorkerSpec)
+
+pytestmark = pytest.mark.chaos_proc
+
+STEPS = 10
+CKPT_EVERY = 3
+# generous in-harness deadline per master run: a cell is 2-3 incarnations
+# x (imports + JIT) plus backoff; a hung cell fails fast instead of wedging
+# the suite (JobMasterDeadlineExceeded)
+RUN_DEADLINE_S = 300.0
+
+
+def run_master(root, name, *, chaos, n_ps, padded,
+               heartbeat_deadline_s=4.0, max_reexecs=5):
+    workdir = os.path.join(str(root), name)
+    spec = WorkerSpec(name=name, workdir=workdir,
+                      ckpt_dir=os.path.join(workdir, "ckpt"),
+                      steps=STEPS, ckpt_every=CKPT_EVERY,
+                      n_ps=n_ps, padded=padded, chaos_proc=chaos)
+    master = JobMaster([spec], JobMasterConfig(
+        heartbeat_deadline_s=heartbeat_deadline_s,
+        max_reexecs=max_reexecs, run_deadline_s=RUN_DEADLINE_S))
+    report = master.run()
+    return spec, report
+
+
+def merged_losses(spec):
+    """Per-step loss with the LATEST incarnation winning replayed steps —
+    exactly what survives a recovery."""
+    best = {}
+    for rec in sorted(spec.read_losses(), key=lambda r: r["incarnation"]):
+        best[rec["step"]] = rec["loss"]
+    return [best[s] for s in sorted(best)]
+
+
+@pytest.fixture(scope="module")
+def baseline(tmp_path_factory):
+    """No-fault subprocess runs, one per (n_ps, padded) config, cached —
+    the identical code path the chaos cells must reproduce bit-exactly."""
+    cache = {}
+
+    def get(n_ps, padded):
+        key = (n_ps, padded)
+        if key not in cache:
+            root = tmp_path_factory.mktemp(f"base-ps{n_ps}-{padded}")
+            spec, report = run_master(root, "base", chaos="",
+                                      n_ps=n_ps, padded=padded)
+            assert report.completed and report.reexecs == 0
+            losses = merged_losses(spec)
+            assert len(losses) == STEPS
+            cache[key] = losses
+        return cache[key]
+
+    return get
+
+
+# the kill matrix: every fault kind, kill step, n_ps and layout appears in
+# at least two cells; expected_reexecs is a floor (stop cells may take an
+# extra poll cycle but exactly one SIGSTOP fires)
+MATRIX = [
+    # id                       chaos            n_ps padded  min_reexecs
+    ("kill_at4-ps4-padded",    "kill@4",        4,   True,   1),
+    ("kill_at7-ps2-flat",      "kill@7",        2,   False,  1),
+    ("stop_at4-ps4-flat",      "stop@4",        4,   False,  1),
+    ("stop_at7-ps2-padded",    "stop@7",        2,   True,   1),
+    ("killckpt_at3-ps4-padded", "kill_ckpt@3",  4,   True,   1),
+    ("killckpt_at6-ps2-flat",  "kill_ckpt@6",   2,   False,  1),
+    ("killloop_at4x2-ps2-padded", "kill_loop@4x2", 2, True,  2),
+    ("killloop_at7x2-ps4-flat", "kill_loop@7x2", 4,  False,  2),
+]
+
+
+@pytest.mark.parametrize("cell,chaos,n_ps,padded,min_reexecs",
+                         MATRIX, ids=[m[0] for m in MATRIX])
+def test_kill_matrix_bit_exact(tmp_path, baseline, cell, chaos, n_ps,
+                               padded, min_reexecs):
+    spec, report = run_master(tmp_path, cell, chaos=chaos,
+                              n_ps=n_ps, padded=padded)
+
+    assert report.completed, f"cell {cell} did not complete: {report.events}"
+    assert report.final_steps[cell] == STEPS
+    assert report.reexecs >= min_reexecs
+    # every non-final incarnation died by SIGKILL (the master SIGKILLs
+    # SIGSTOPped husks too); the final one exited cleanly
+    history = report.exit_history[cell]
+    assert history[-1] == 0
+    assert all(rc == -9 for rc in history[:-1])
+
+    # headline: post-recovery trajectory == no-fault trajectory, to the ulp
+    losses = merged_losses(spec)
+    base = baseline(n_ps, padded)
+    assert len(losses) == STEPS
+    assert losses == base, (
+        f"cell {cell}: recovery not bit-exact\n got  {losses}\n want {base}")
+
+    # each re-exec produced a measured death -> ready latency, and the
+    # replacement's flash restore was timed
+    assert len(report.reexec_latencies_s) >= min_reexecs
+    assert all(lat > 0 for lat in report.reexec_latencies_s)
+    assert len(report.restore_latencies_s) >= min_reexecs
+    assert all(lat > 0 for lat in report.restore_latencies_s)
+
+    # the scripted faults left a durable trace (O_APPEND + fsync survives
+    # the SIGKILL that follows)
+    fired = [json.loads(ln) for ln in open(spec.faults_path)]
+    assert len(fired) >= min_reexecs
+    kind = chaos.split("@")[0]
+    assert all(rec["fault"] == kind for rec in fired)
+
+    # kill-during-save never poisons the store: whatever staging dirs the
+    # SIGKILL stranded, valid_steps counted none of them (satellite fix)
+    if kind == "kill_ckpt":
+        committed = [d for d in os.listdir(spec.ckpt_dir)
+                     if d.startswith("ckpt_") and ".tmp-" not in d]
+        assert committed, "no committed checkpoint survived"
+
+    # the measured latencies price worker replacement in the cluster sim
+    timings = report.measured_timings()
+    mean = sum(report.reexec_latencies_s) / len(report.reexec_latencies_s)
+    assert timings.worker_reexec_s == pytest.approx(mean)
+    assert timings.reexec_s() == pytest.approx(mean)
+
+
+def test_master_event_log_roundtrip(tmp_path, baseline):
+    """The structured event log is valid JSONL ending in a summary line."""
+    spec, report = run_master(tmp_path, "evlog", chaos="kill@4",
+                              n_ps=4, padded=True)
+    assert report.completed
+    path = os.path.join(str(tmp_path), "events.jsonl")
+    master = JobMaster([spec])          # write path only needs the events
+    master.events = report.events
+    master.write_event_log(path, report)
+    lines = [json.loads(ln) for ln in open(path)]
+    assert lines[-1]["kind"] == "summary"
+    assert lines[-1]["reexecs"] == report.reexecs
+    assert lines[-1]["completed"] is True
+    kinds = [ln["kind"] for ln in lines]
+    assert "worker_died" in kinds and "reexec_ready" in kinds
+    # and the bit-exactness holds on this extra cell too
+    assert merged_losses(spec) == baseline(4, True)
+
+
+def test_measured_timings_shorten_sim_recovery():
+    """Feeding measured re-exec latency into the sim shrinks the worker
+    replacement horizon from the 300 s pod-provision default."""
+    report = JobMasterReport(
+        completed=True, final_steps={"w": STEPS}, reexecs=1,
+        exit_history={"w": [-9, 0]}, reexec_latencies_s=[1.7],
+        restore_latencies_s=[1.1], wall_seconds=9.0, events=[])
+    t = report.measured_timings()
+    assert t.reexec_s() == pytest.approx(1.7)
+    assert t.flash_ckpt_load_s == pytest.approx(1.1)
+    # default (unmeasured) timings keep the conservative provision horizon,
+    # so pinned sim/bench artifacts are unchanged
+    assert MigrationTimings().reexec_s() == MigrationTimings().provision_s

@@ -1,10 +1,23 @@
-"""Hardened flash checkpoint: atomicity, checksums, newest-valid fallback."""
+"""Hardened flash checkpoint: atomicity, checksums, newest-valid fallback.
+
+The property tests at the bottom ride the hypothesis shim
+(``tests/_hypothesis_compat``): under arbitrary combinations of truncated /
+bit-flipped blobs and torn manifest dirs, ``restore`` must return the newest
+fully-valid step bit-exactly or raise cleanly — never hand back damaged
+state. The fork-based regression pins the atomic-rename commit point: a
+SIGKILL anywhere before ``_commit``'s ``os.replace`` (even with every byte
+of the staging dir already written) must leave nothing ``valid_steps``
+counts as valid.
+"""
 import json
 import os
+import shutil
+import signal
 import tempfile
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core.faults import corrupt_blob
 from repro.core.flash_checkpoint import (
@@ -167,6 +180,124 @@ def test_optional_leaves_zero_fill(store):
     restored, _ = ck.restore(like, optional_leaves=("['extra']",))
     np.testing.assert_array_equal(np.asarray(restored["extra"]),
                                   np.zeros(2, np.float32))
+
+
+# --------------------------------------- property: damage never lies upward
+STEPS = (5, 10, 15, 20)
+DAMAGE = ("none",            # leave the blob intact
+          "flip",            # bit-flip bytes mid-file (bad DMA / bit rot)
+          "truncate",        # cut leaves.npz in half (mid-write kill)
+          "flip_manifest",   # corrupt the manifest JSON itself
+          "drop_manifest",   # torn dir: data present, manifest missing
+          "drop_leaves")     # torn dir: manifest present, data missing
+
+
+def _apply_damage(d: str, step: int, action: str) -> None:
+    path = os.path.join(d, _dirname(step))
+    if action == "flip":
+        corrupt_blob(path, mode="flip", seed=step)
+    elif action == "truncate":
+        corrupt_blob(path, mode="truncate")
+    elif action == "flip_manifest":
+        corrupt_blob(os.path.join(path, "MANIFEST.json"), seed=step)
+    elif action == "drop_manifest":
+        os.remove(os.path.join(path, "MANIFEST.json"))
+    elif action == "drop_leaves":
+        os.remove(os.path.join(path, "leaves.npz"))
+
+
+@settings(max_examples=30, deadline=None)
+@given(damage=st.lists(st.sampled_from(DAMAGE), min_size=len(STEPS),
+                       max_size=len(STEPS)),
+       torn_staging=st.booleans())
+def test_restore_newest_fully_valid_or_clean_raise(damage, torn_staging):
+    """Whatever subset of blobs is damaged however, restore returns the
+    newest untouched step bit-exactly — or raises FileNotFoundError when
+    none survive. Damaged steps also vanish from valid_steps()."""
+    with tempfile.TemporaryDirectory() as d:
+        ck = FlashCheckpoint(d, keep=len(STEPS), async_persist=False)
+        for s in STEPS:
+            ck.save(_state(float(s)), s)
+        ck.drop_memory_tier()               # force the disk tier under test
+        for s, action in zip(STEPS, damage):
+            _apply_damage(d, s, action)
+        if torn_staging:                    # a kill-during-save leftover
+            os.makedirs(os.path.join(d, "ckpt_000000000099.tmp-1"))
+        survivors = [s for s, a in zip(STEPS, damage) if a == "none"]
+
+        if not survivors:
+            with pytest.raises(FileNotFoundError, match="no valid checkpoint"):
+                ck.restore(_state(0.0))
+            return
+        restored, step = ck.restore(_state(0.0))
+        assert step == max(survivors)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      _state(float(step))["w"])
+        assert ck.valid_steps() == survivors
+
+
+# ------------------------------------------- regression: the commit point
+def _fork_save_killed_in_pre_commit(d: str, step: int) -> int:
+    """Fork a child that SIGKILLs itself inside the pre-commit window of
+    ``save(step)`` — after every staging byte is written and fsynced, before
+    the atomic rename. The nastiest torn-write case a real kill produces."""
+    pid = os.fork()
+    if pid == 0:                            # pragma: no cover - dies by signal
+        ck = FlashCheckpoint(
+            d, keep=3, async_persist=False,
+            pre_commit_hook=lambda tmp, s: os.kill(os.getpid(),
+                                                   signal.SIGKILL))
+        ck.save(_state(float(step)), step)
+        os._exit(1)                         # unreachable: hook killed us
+    _, status = os.waitpid(pid, 0)
+    assert os.WIFSIGNALED(status) and os.WTERMSIG(status) == signal.SIGKILL
+    return pid
+
+
+def test_midwrite_sigkill_never_counts_as_valid(tmp_path):
+    """Satellite fix: kill-during-save must never leave a directory that
+    ``valid_steps`` counts as valid — commit is ONE atomic rename."""
+    d = str(tmp_path)
+    ck = FlashCheckpoint(d, keep=3, async_persist=False)
+    ck.save(_state(1.0), 5)                 # one good committed blob
+    child = _fork_save_killed_in_pre_commit(d, 10)
+
+    # the stranded staging dir is byte-complete (data + manifest written,
+    # only the rename missing) yet invisible to validity and restore
+    staging = os.path.join(d, f"ckpt_{10:012d}.tmp-{child}")
+    assert os.path.isdir(staging)
+    assert os.path.exists(os.path.join(staging, "leaves.npz"))
+    assert os.path.exists(os.path.join(staging, "MANIFEST.json"))
+    assert ck.valid_steps() == [5]
+    ck.drop_memory_tier()
+    restored, step = ck.restore(_state(0.0))
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), _state(1.0)["w"])
+
+    # the survivor keeps checkpointing: a later save commits normally and
+    # eviction never touches the stranded staging dir
+    ck.save(_state(3.0), 15)
+    assert ck.valid_steps() == [5, 15]
+    assert os.path.isdir(staging)
+
+
+def test_commit_is_last_step_before_fault_hook(tmp_path):
+    """Hook ordering pins the commit point: pre_commit sees only the
+    staging path (no final dir yet); fault_hook sees only the final dir."""
+    calls = []
+
+    def pre(tmp, step):
+        calls.append(("pre", os.path.basename(tmp),
+                      os.path.isdir(tmp.rsplit(".tmp-", 1)[0])))
+
+    def post(final, step):
+        calls.append(("post", os.path.basename(final), os.path.isdir(final)))
+
+    ck = FlashCheckpoint(str(tmp_path), async_persist=False,
+                         pre_commit_hook=pre, fault_hook=post)
+    ck.save(_state(1.0), 7)
+    assert calls == [("pre", f"ckpt_{7:012d}.tmp-{os.getpid()}", False),
+                     ("post", f"ckpt_{7:012d}", True)]
 
 
 def test_async_persist_waits(tmp_path):

@@ -1,0 +1,152 @@
+"""Unit tests for supervisor internals — no worker processes involved.
+
+Covers the three policy mechanisms the chaos integration suites exercise
+only incidentally: the EWMA straggler detector's cold-start window, the
+exponential-backoff restart budget (exhaustion raises, delays grow to the
+cap), and the OOM degradation ladder's ordering (hot-cache first, then
+batch halving with a floor).
+"""
+import dataclasses
+import tempfile
+
+import pytest
+
+from repro.configs.dlrm_models import reduced_dlrm
+from repro.configs.registry import get_dlrm
+from repro.core.flash_checkpoint import FlashCheckpoint
+from repro.train.supervisor import (DLRMJob, RestartBudgetExceeded,
+                                    Supervisor, SupervisorConfig)
+
+
+class StubJob:
+    """Duck-typed DLRMJob stand-in: restore/degrade without jax or state."""
+
+    def __init__(self):
+        self.injector = None
+        self.global_step = 0
+        self.restore_calls = 0
+
+    def restore(self, *, onto_n_ps=None):
+        self.restore_calls += 1
+        return self.global_step
+
+    def degrade(self):
+        return "stub_degrade"
+
+
+def make_sup(**cfg):
+    return Supervisor(StubJob(), SupervisorConfig(**cfg))
+
+
+# ---------------------------------------------------- EWMA cold-start window
+def test_ewma_warmup_suppresses_straggler_detection():
+    """The first ``ewma_warmup_steps`` samples can be wildly slow (JIT
+    compile, cache warm-up) without tripping the detector."""
+    sup = make_sup(ewma_warmup_steps=5, straggler_factor=3.0)
+    # a 100x outlier inside the cold-start window: folded, not flagged
+    for i, dt in enumerate([0.01, 1.0, 0.01, 0.01, 0.01]):
+        sup._observe_step_time(i, dt)
+    assert not [e for e in sup.events if e.kind == "straggler_detected"]
+
+
+def test_ewma_detects_after_warmup_and_clips_the_fold():
+    sup = make_sup(ewma_warmup_steps=3, straggler_factor=3.0,
+                   ewma_alpha=0.25)
+    for i in range(4):
+        sup._observe_step_time(i, 0.01)
+    baseline = sup._ewma
+    assert baseline == pytest.approx(0.01)
+    sup._observe_step_time(4, 1.0)          # 100x the EWMA: flagged
+    ev = [e for e in sup.events if e.kind == "straggler_detected"]
+    assert len(ev) == 1 and ev[0].step == 4
+    assert ev[0].detail["factor"] == pytest.approx(100.0, rel=0.05)
+    # the folded sample was clipped to factor * ewma, so one outlier moves
+    # the baseline by at most alpha * (factor - 1) * ewma
+    assert sup._ewma <= baseline * (1 + 0.25 * (3.0 - 1)) * 1.001
+    # and the detector still works right after (baseline not poisoned)
+    sup._observe_step_time(5, 1.0)
+    assert len([e for e in sup.events
+                if e.kind == "straggler_detected"]) == 2
+
+
+def test_first_sample_seeds_the_ewma():
+    sup = make_sup(ewma_warmup_steps=5)
+    sup._observe_step_time(0, 0.5)
+    assert sup._ewma == pytest.approx(0.5)
+
+
+# ----------------------------------------------- backoff + restart budget
+def test_backoff_grows_exponentially_to_the_cap():
+    sup = make_sup(backoff_base_s=0.01, backoff_cap_s=0.04,
+                   backoff_jitter=0.0)
+    delays = []
+    for failures in (1, 2, 3, 4, 5):
+        sup._consecutive_failures = failures
+        delays.append(sup._backoff())
+    assert delays == pytest.approx([0.01, 0.02, 0.04, 0.04, 0.04])
+
+
+def test_backoff_jitter_is_bounded_and_deterministic():
+    a = make_sup(backoff_base_s=0.01, backoff_jitter=0.25, seed=7)
+    b = make_sup(backoff_base_s=0.01, backoff_jitter=0.25, seed=7)
+    a._consecutive_failures = b._consecutive_failures = 1
+    da, db = a._backoff(), b._backoff()
+    assert da == db                          # same seed, same delay
+    assert 0.0075 <= da <= 0.0125            # within +/- 25%
+
+
+def test_restart_budget_exhaustion_raises_with_event():
+    sup = make_sup(max_restarts=3, backoff_base_s=0.0, backoff_jitter=0.0)
+    for _ in range(3):
+        sup._recover("ps_loss", 10)
+    assert sup.job.restore_calls == 3
+    with pytest.raises(RestartBudgetExceeded, match="budget of 3"):
+        sup._recover("ps_loss", 10)
+    ev = [e for e in sup.events if e.kind == "restart_budget_exceeded"]
+    assert len(ev) == 1
+    assert ev[0].detail["budget"] == 3
+    # the over-budget attempt never touched the job
+    assert sup.job.restore_calls == 3
+
+
+def test_recover_resets_nothing_but_counts_consecutive_failures():
+    sup = make_sup(max_restarts=5, backoff_base_s=0.0, backoff_jitter=0.0)
+    sup._recover("hang", 4)
+    sup._recover("hang", 5)
+    assert sup.restarts == 2
+    assert sup._consecutive_failures == 2
+    recovered = [e for e in sup.events if e.kind == "recovered"]
+    assert [e.detail["action"] for e in recovered] == ["restore", "restore"]
+
+
+# ------------------------------------------------- OOM degradation ladder
+def test_degrade_ladder_ordering_no_processes():
+    """First OOM drops the hot-row cache; repeats halve the batch down to
+    the floor of 8 — in that order, recompiling each time."""
+    cfg = dataclasses.replace(reduced_dlrm(get_dlrm("wide_deep")),
+                              hot_rows_k=64)       # arm the first rung
+    assert cfg.batch_size >= 32
+    with tempfile.TemporaryDirectory() as d:
+        job = DLRMJob(cfg, FlashCheckpoint(d, async_persist=False))
+        b0 = job.cfg.batch_size
+        actions = [job.degrade() for _ in range(4)]
+    assert actions[0] == "drop_hot_cache"
+    assert job.cfg.hot_rows_k == 0
+    expect = []
+    b = b0
+    for _ in range(3):
+        b = max(b // 2, 8)
+        expect.append(f"shrink_batch_to_{b}")
+    assert actions[1:] == expect
+    assert job.cfg.batch_size == b
+    assert job.degrade_level == 4
+    assert job.global_step == 0              # degradation never loses steps
+
+
+def test_degrade_floor_never_goes_below_8():
+    cfg = reduced_dlrm(get_dlrm("wide_deep"))
+    with tempfile.TemporaryDirectory() as d:
+        job = DLRMJob(cfg, FlashCheckpoint(d, async_persist=False))
+        for _ in range(10):
+            job.degrade()
+        assert job.cfg.batch_size == 8
